@@ -1,0 +1,105 @@
+"""EXPERIMENTS.md §Dry-run/§Roofline section generator.
+
+Reads results/dryrun/*.json and emits the markdown tables (baseline cells
+plus any __perf_<mode> variants side by side).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+from typing import Dict, List
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load() -> Dict[str, Dict]:
+    out = {}
+    for f in sorted(glob.glob(f"{RESULTS}/*.json")):
+        tag = os.path.basename(f)[:-5]
+        r = json.load(open(f))
+        if "error" not in r:
+            out[tag] = r
+    return out
+
+
+def dryrun_table(recs: Dict[str, Dict]) -> str:
+    rows = ["| arch | shape | mesh | compile (s) | args GiB/dev | "
+            "temp GiB/dev | HLO GFLOP/dev | coll GiB/dev | #coll |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for tag, r in recs.items():
+        if "__perf" in tag:
+            continue
+        m, c = r["memory"], r["collectives"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']:.1f} | {m['argument_bytes']/2**30:.2f} "
+            f"| {m['temp_bytes']/2**30:.2f} "
+            f"| {r['cost']['flops']/1e9:.0f} "
+            f"| {c['total']/2**30:.2f} | {c['counts']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: Dict[str, Dict]) -> str:
+    rows = ["| arch | shape | mesh | compute (s) | memory (s) | "
+            "collective (s) | bound | MODEL/HLO flops | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for tag, r in recs.items():
+        if "__perf" in tag:
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | {rl['bound']} "
+            f"| {rl['useful_flops_ratio']:.3f} "
+            f"| {rl['mfu_upper_bound']*100:.2f}% |")
+    return "\n".join(rows)
+
+
+def perf_table(recs: Dict[str, Dict]) -> str:
+    """Baseline vs perf variants for the hillclimbed cells."""
+    groups: Dict[str, List[str]] = defaultdict(list)
+    for tag in recs:
+        if "__perf" in tag:
+            base = tag.split("__perf")[0]
+            groups[base].append(tag)
+    rows = ["| cell | variant | compute (s) | memory (s) | collective (s) "
+            "| bound | temp GiB/dev | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for base in sorted(groups):
+        seq = [base] + sorted(groups[base])
+        for tag in seq:
+            if tag not in recs:
+                continue
+            r = recs[tag]
+            rl = r["roofline"]
+            variant = ("baseline" if tag == base
+                       else "perf:" + tag.split("__perf_")[1])
+            cell = f"{r['arch']} x {r['shape']} ({r['mesh']})"
+            rows.append(
+                f"| {cell} | {variant} | {rl['compute_s']:.3f} "
+                f"| {rl['memory_s']:.3f} | {rl['collective_s']:.3f} "
+                f"| {rl['bound']} "
+                f"| {r['memory']['temp_bytes']/2**30:.1f} "
+                f"| {rl['mfu_upper_bound']*100:.2f}% |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    recs = load()
+    n_base = sum(1 for t in recs if "__perf" not in t)
+    print(f"<!-- generated from {RESULTS}: {n_base} baseline cells, "
+          f"{len(recs)-n_base} perf variants -->\n")
+    print("### Dry-run records\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline terms (baseline)\n")
+    print(roofline_table(recs))
+    print("\n### Perf variants\n")
+    print(perf_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig. 10b/c reproduction (REAL): compiler stage wall-clock breakdown.
+
+Times every StreamTensor stage (trace, DSE+fusion+FIFO sizing, partition,
+allocation, lowering) for each paper model.  The paper's total compile time
+(its high-level stages) ranges 26.8-63.4s including MLIR/HLS machinery; our
+Python pipeline targets the same asymptotics with small constants.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.configs import PAPER_MODELS
+from repro.core.lowering import compile_model
+from repro.core.platforms import U55C
+
+from .paper_data import FIG10C_COMPILE_RANGE_S
+
+
+def run(tokens: int = 256) -> List[Dict[str, float]]:
+    rows = []
+    for name, cfg in PAPER_MODELS.items():
+        t0 = time.perf_counter()
+        c = compile_model(cfg, tokens=tokens, platform=U55C, dse_budget=12)
+        total = time.perf_counter() - t0
+        rows.append({"model": name, "total_s": total,
+                     **{f"stage_{k}": v for k, v in c.stage_seconds.items()}})
+    return rows
+
+
+def main() -> None:
+    print("# Fig. 10c — compile-time breakdown (s)")
+    for r in run():
+        stages = {k[6:]: v for k, v in r.items() if k.startswith("stage_")}
+        parts = " ".join(f"{k}={v:.2f}" for k, v in stages.items())
+        print(f"{r['model']:16s} total={r['total_s']:6.2f}s  {parts}")
+    print(f"paper total range: {FIG10C_COMPILE_RANGE_S[0]}-"
+          f"{FIG10C_COMPILE_RANGE_S[1]}s (incl. MLIR+profiling machinery)")
+
+
+if __name__ == "__main__":
+    main()

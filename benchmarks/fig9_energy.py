@@ -1,0 +1,47 @@
+"""Fig. 9 reproduction: energy efficiency (tokens/J) vs A100.
+
+tokens/J = decode speed / power.  Ours: calibrated U55C model at 150 W
+design power; A100 measured speeds (Table 5 / paper Fig. 9 context) at
+300 W.  The paper reports 1.99x (Qwen) and 1.59x (Gemma) advantages.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import PAPER_MODELS
+
+from .fpga_model import calibrated_latency
+from .paper_data import FIG9_RATIO_GEMMA, FIG9_RATIO_QWEN, POWER
+
+# A100 decode speeds for the emerging models (tok/s) — derived from the
+# paper's Fig. 9 bar ratios and its GPT-2 measurements.
+A100_SPEED = {"gpt2": 115.0, "paper-qwen": 90.0, "paper-llama": 70.0,
+              "paper-gemma": 85.0}
+
+
+def run() -> List[Dict[str, float]]:
+    rows = []
+    for name, cfg in PAPER_MODELS.items():
+        ours = calibrated_latency(cfg, 128)
+        speed = ours.speed_tps(128)
+        ours_tpj = speed / POWER["ours"]
+        a100_tpj = A100_SPEED[name] / POWER["a100"]
+        rows.append({"model": name, "ours_tps": speed,
+                     "ours_tokens_per_J": ours_tpj,
+                     "a100_tokens_per_J": a100_tpj,
+                     "ratio": ours_tpj / a100_tpj})
+    return rows
+
+
+def main() -> None:
+    print("# Fig. 9 — energy efficiency (tokens/J)")
+    for r in run():
+        print(f"{r['model']:16s} ours={r['ours_tokens_per_J']:.2f} tok/J "
+              f"a100={r['a100_tokens_per_J']:.2f} tok/J "
+              f"ratio={r['ratio']:.2f}")
+    print(f"paper ratios: qwen {FIG9_RATIO_QWEN}, gemma {FIG9_RATIO_GEMMA}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""U55C dataflow latency model for the paper-reproduction benchmarks.
+
+Combines the StreamTensor compiler's own dataflow makespan (token behavior
+model + LP start times, §5.3) with two platform calibration constants fitted
+once against the paper's measured GPT-2 [32:32] and [256:256] rows:
+
+  * ``LAYER_OVERHEAD_S``  — per-layer accelerator invocation overhead
+    (Vitis kernel launch + DMA descriptor setup).  The paper executes one
+    fused transformer block per FPGA and re-triggers it per layer (§6.1).
+  * ``GENERATION_FIXED_S`` — per-generation fixed cost (cache install).
+
+Everything else is first-principles: weight streaming at HBM bandwidth
+(W4A8), kernel (L, D, II) from the platform model, LP-scheduled overlap.
+The validation (table4 benchmark) checks the *other* rows and the TTFT
+scaling the paper highlights.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.dse import evaluate_trial, modeled_latency_s
+from repro.core.platforms import U55C, Platform
+from repro.core.trace import trace_block
+
+# Calibrated against paper Table 4 GPT-2 [32:32] & [256:256] (see module
+# docstring); typical Vitis invocation overhead is O(100us), matching.
+LAYER_OVERHEAD_S = 160e-6
+GENERATION_FIXED_S = 24.2e-3
+W4_BYTES_PER_PARAM = 0.5
+
+# --- calibrated per-token constants (fit: TTFT on [32:32]; decode on
+# [32:32]+[256:256]; rows [64:64]/[128:128] are HELD OUT and used as the
+# validation in table4) -------------------------------------------------
+II_PROMPT_S = 45.0e-6        # per token per layer, prompt streaming
+DECODE_TOKEN_S = 4.262e-3    # per generated token, whole model
+
+
+@dataclass(frozen=True)
+class LatencyBreakdown:
+    ttft_s: float
+    per_token_s: float
+    fixed_s: float
+
+    def latency_s(self, out_len: int) -> float:
+        return self.ttft_s + self.fixed_s + out_len * self.per_token_s
+
+    def speed_tps(self, out_len: int) -> float:
+        """Paper metric: out_len / (latency - TTFT)."""
+        return out_len / (self.fixed_s + out_len * self.per_token_s)
+
+
+@lru_cache(maxsize=None)
+def _block_makespan_s(cfg: ModelConfig, tokens: int, kv_len: int,
+                      platform: Platform = U55C) -> float:
+    ops = trace_block(cfg, tokens=tokens, kv_len=kv_len)
+    trial = evaluate_trial(ops, platform, 64, 64, keep_artifacts=True)
+    # Dataflow makespan only (weight DMA charged separately below so the
+    # whole-model weight stream isn't double counted per block).
+    makespan_cycles = max(
+        trial.fifo.start_times[k.name] + k.timing.latency
+        for k in trial.graph.kernels())
+    return platform.seconds(makespan_cycles)
+
+
+def weight_stream_s(cfg: ModelConfig, platform: Platform = U55C) -> float:
+    """One full pass of W4 weights from HBM (decode reads every weight)."""
+    return cfg.param_count() * W4_BYTES_PER_PARAM / platform.hbm_bw
+
+
+def model_latency(cfg: ModelConfig, in_len: int,
+                  platform: Platform = U55C) -> LatencyBreakdown:
+    """First-principles compiler model: LP-scheduled block makespans +
+    weight streaming + invocation overheads.  Reported alongside the
+    calibrated model; its known gap (weight-stream-bound blocks make TTFT
+    flat where the paper's measured design is per-token-II-bound) is
+    discussed in EXPERIMENTS.md."""
+    layers = cfg.num_layers
+    prefill_block = _block_makespan_s(cfg, in_len, in_len, platform)
+    ttft = layers * (prefill_block + LAYER_OVERHEAD_S) + \
+        weight_stream_s(cfg, platform)
+    decode_block = _block_makespan_s(cfg, 1, in_len, platform)
+    per_token = layers * (decode_block + LAYER_OVERHEAD_S) + \
+        weight_stream_s(cfg, platform)
+    return LatencyBreakdown(ttft_s=ttft, per_token_s=per_token,
+                            fixed_s=GENERATION_FIXED_S)
+
+
+def calibrated_latency(cfg: ModelConfig, in_len: int,
+                       platform: Platform = U55C) -> LatencyBreakdown:
+    """Calibrated U55C model (constants fit on the [32:32] and [256:256]
+    GPT-2 rows; middle rows held out).  Per-token terms scale with the
+    model's weight volume relative to GPT-2, keeping the decode
+    weight-bandwidth-bound structure the paper relies on (§6.1)."""
+    gpt2_weights = 353e6 * W4_BYTES_PER_PARAM
+    scale = (cfg.param_count() * W4_BYTES_PER_PARAM) / gpt2_weights
+    layer_scale = cfg.num_layers / 24.0
+    ttft = cfg.num_layers * in_len * II_PROMPT_S
+    per_token = DECODE_TOKEN_S * max(scale, layer_scale * 0.5)
+    return LatencyBreakdown(ttft_s=ttft, per_token_s=per_token,
+                            fixed_s=GENERATION_FIXED_S)
+
+
+def gpu_roofline_latency(cfg: ModelConfig, in_len: int,
+                         platform: Platform) -> LatencyBreakdown:
+    """Pure-roofline GPU model (no software overhead): prefill is compute
+    bound, decode is weight-bandwidth bound.  The gap between this and the
+    paper's measured GPU rows is the framework overhead StreamTensor's
+    dataflow execution avoids — reported alongside in table5."""
+    n = cfg.param_count()
+    flops_prefill = 2.0 * n * in_len
+    ttft = max(flops_prefill / platform.peak_int8_ops,
+               n / platform.hbm_bw)          # W8A8
+    per_token = max(2.0 * n / platform.peak_int8_ops, n / platform.hbm_bw)
+    return LatencyBreakdown(ttft_s=ttft, per_token_s=per_token, fixed_s=0.0)

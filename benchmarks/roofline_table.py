@@ -1,0 +1,56 @@
+"""§Roofline table generator: aggregates results/dryrun/*.json.
+
+Prints the per-(arch x shape x mesh) three-term roofline table used in
+EXPERIMENTS.md, plus dominant bounds and useful-flops ratios.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load() -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(f"{RESULTS}/*.json")):
+        r = json.load(open(f))
+        if "error" not in r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | compute (s) | memory (s) | "
+           "collective (s) | bound | useful flops | peak GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl, m = r["roofline"], r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | {rl['bound']} "
+            f"| {rl['useful_flops_ratio']:.3f} "
+            f"| {m['peak_bytes']/2**30:.2f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    rows = load()
+    if not rows:
+        print(f"(no dry-run records under {RESULTS}; run "
+              f"python -m repro.launch.dryrun --all first)")
+        return
+    print(markdown_table(rows))
+    bounds = {}
+    for r in rows:
+        bounds[r["roofline"]["bound"]] = \
+            bounds.get(r["roofline"]["bound"], 0) + 1
+    print(f"\n{len(rows)} cells; dominant bounds: {bounds}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name1,name2]
+
+Prints a ``name,seconds,status`` CSV per benchmark plus the human tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (fifo_sizing_bench, fig9_energy, fig10a_memory, fig10c_compile,
+               roofline_table, table4_gpt2, table5_gpu)
+
+BENCHES = [
+    ("table4_gpt2", table4_gpt2.main),
+    ("table5_gpu", table5_gpu.main),
+    ("fig9_energy", fig9_energy.main),
+    ("fig10a_memory", fig10a_memory.main),
+    ("fig10c_compile", fig10c_compile.main),
+    ("fifo_sizing", fifo_sizing_bench.main),
+    ("roofline_table", roofline_table.main),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    lines = []
+    for name, fn in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            fn()
+            status = "ok"
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(name)
+            status = f"FAILED: {e!r}"
+        lines.append(f"{name},{time.perf_counter()-t0:.2f},{status}")
+    print("\n# summary CSV")
+    print("benchmark,seconds,status")
+    for line in lines:
+        print(line)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""Quickstart: the StreamTensor pipeline end to end on one block.
+
+Traces a transformer block to the dataflow graph, explores the tiling space,
+fuses kernels under the on-chip budget (itensor-typed edges + Algorithm-1
+converters), sizes FIFOs with the LP, validates the schedule in the
+discrete-event simulator, and runs the equivalent fused Pallas kernels
+(interpret mode) against the model's reference layers.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch llama3-8b]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core import compile_model
+from repro.core.platforms import TPU_V5E
+from repro.kernels import flash_attention, ref, streamed_ffn
+from repro.runtime.simulator import simulate_dataflow
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+
+    # 1) The compiler: trace -> tile -> fuse -> size FIFOs -> lower.
+    print(f"== StreamTensor compile: one {cfg.name} block ==")
+    c = compile_model(cfg, tokens=256, platform=TPU_V5E, dse_budget=8)
+    s = c.summary()
+    print(f" kernels={s['kernels']} fusion_groups={s['fusion_groups']} "
+          f"memory_ratio={s['memory_ratio']*100:.1f}% "
+          f"fifo_depth={s['fifo_total_depth']}")
+    print(f" lowered implementations: {s['implementations']}")
+
+    # 2) Deadlock-freedom: LP-sized FIFOs complete in the simulator.
+    timings = {k.name: k.timing for k in c.graph.kernels()}
+    sim = simulate_dataflow(c.graph, timings, plan=c.fifo)
+    print(f" simulator: completed={sim.completed} "
+          f"makespan={sim.makespan:.0f} cycles")
+
+    # 3) The fused kernels themselves (Pallas, interpret mode on CPU).
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (128, 64), jnp.float32)
+    wg = jax.random.normal(jax.random.PRNGKey(1), (64, 128)) * 0.1
+    wu = jax.random.normal(jax.random.PRNGKey(2), (64, 128)) * 0.1
+    wd = jax.random.normal(jax.random.PRNGKey(3), (128, 64)) * 0.1
+    out = streamed_ffn(x, wg, wu, wd, block_t=32, block_f=64)
+    want = ref.ffn_ref(x, wg, wu, wd)
+    print(f" streamed_ffn max err: "
+          f"{float(jnp.abs(out - want).max()):.2e}")
+
+    q = jax.random.normal(jax.random.PRNGKey(4), (2, 128, 8, 32))
+    k = jax.random.normal(jax.random.PRNGKey(5), (2, 128, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(6), (2, 128, 2, 32))
+    fa = flash_attention(q, k, v, block_q=32, block_kv=32)
+    fr = ref.attention_ref(q, k, v)
+    print(f" flash_attention (GQA 8:2) max err: "
+          f"{float(jnp.abs(fa - fr).max()):.2e}")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Architecture registry: ``--arch <id>`` resolution + the cell matrix.
+
+``ARCHS`` maps the assignment's architecture ids to their exact configs;
+``cells()`` enumerates every runnable (arch x shape) dry-run cell with the
+skips documented in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Tuple
+
+from .base import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+                   ModelConfig, ShapeConfig, shapes_for, skipped_shapes_for)
+from .gemma3_4b import CONFIG as GEMMA3_4B
+from .gpt2 import CONFIG as GPT2
+from .gpt2 import PAPER_GEMMA, PAPER_LLAMA, PAPER_QWEN
+from .granite_moe_1b import CONFIG as GRANITE_MOE_1B
+from .granite_moe_3b import CONFIG as GRANITE_MOE_3B
+from .hubert_xlarge import CONFIG as HUBERT_XLARGE
+from .llama3_8b import CONFIG as LLAMA3_8B
+from .qwen1p5_0p5b import CONFIG as QWEN1P5_0P5B
+from .qwen2_vl_2b import CONFIG as QWEN2_VL_2B
+from .qwen3_0p6b import CONFIG as QWEN3_0P6B
+from .rwkv6_7b import CONFIG as RWKV6_7B
+from .zamba2_2p7b import CONFIG as ZAMBA2_2P7B
+
+ARCHS: Dict[str, ModelConfig] = {
+    "zamba2-2.7b": ZAMBA2_2P7B,
+    "qwen2-vl-2b": QWEN2_VL_2B,
+    "qwen1.5-0.5b": QWEN1P5_0P5B,
+    "gemma3-4b": GEMMA3_4B,
+    "qwen3-0.6b": QWEN3_0P6B,
+    "llama3-8b": LLAMA3_8B,
+    "granite-moe-1b-a400m": GRANITE_MOE_1B,
+    "granite-moe-3b-a800m": GRANITE_MOE_3B,
+    "hubert-xlarge": HUBERT_XLARGE,
+    "rwkv6-7b": RWKV6_7B,
+    # The paper's own models (benchmarks, not dry-run cells).
+    "gpt2": GPT2,
+}
+
+PAPER_MODELS: Dict[str, ModelConfig] = {
+    "gpt2": GPT2,
+    "paper-qwen": PAPER_QWEN,
+    "paper-llama": PAPER_LLAMA,
+    "paper-gemma": PAPER_GEMMA,
+}
+
+ASSIGNED_ARCHS: Tuple[str, ...] = tuple(a for a in ARCHS if a != "gpt2")
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return ARCHS[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return ALL_SHAPES[name]
+
+
+def cells() -> Iterator[Tuple[ModelConfig, ShapeConfig]]:
+    """Every runnable (arch x shape) dry-run cell."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = ARCHS[arch]
+        for shape in shapes_for(cfg):
+            yield cfg, shape
+
+
+def skipped_cells() -> Iterator[Tuple[str, str, str]]:
+    """(arch, shape, reason) for documented skips."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = ARCHS[arch]
+        for shape, reason in skipped_shapes_for(cfg):
+            yield arch, shape, reason
+
+
+__all__ = [
+    "ARCHS", "ASSIGNED_ARCHS", "PAPER_MODELS", "ModelConfig", "ShapeConfig",
+    "get_config", "get_shape", "cells", "skipped_cells", "shapes_for",
+    "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

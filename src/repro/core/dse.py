@@ -1,0 +1,167 @@
+"""Design-space exploration driver — paper §5.1 (Optuna stand-in) + §5.
+
+StreamTensor explores three hierarchical spaces:
+
+  1. **Tiling space** (``tiling.py``) — hyperparameters ``default_tile_size``
+     and ``overall_unroll_size``, explored here by a blackbox optimizer with
+     *feedback from the kernel fusion results* (the paper uses Optuna; we ship
+     an offline random + coordinate-hill-climb explorer with the same
+     interface and objective).
+  2. **Fusion space** (``fusion.py``) — Algorithm 2 under ``C_max``.
+  3. **Resource allocation space** (``fifo_sizing.py``/``partition.py``/
+     ``allocation.py``) — FIFO depths via the LP, die partitioning, tiers.
+
+The objective evaluated per trial runs spaces 2 and 3 end-to-end and scores
+the result, exactly the feedback loop of Fig. 4:
+
+    score = modeled end-to-end latency (dataflow makespan + DMA traffic time)
+            + infeasibility penalties (a kernel alone exceeding C_max feeds
+              back "reduce tiling/unroll", paper §5.2.2)
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .fifo_sizing import FifoPlan, size_fifos, solve_start_times
+from .fusion import FusionPlan, explore_fusion
+from .graph import DataflowGraph
+from .platforms import Platform
+from .tiling import LinalgOpSpec, TilingSpace
+
+
+@dataclass
+class TrialResult:
+    params: Dict[str, int]
+    score: float
+    latency_s: float
+    onchip_bytes: float
+    external_bytes: float
+    num_groups: int
+    feasible: bool
+    graph: Optional[DataflowGraph] = None
+    fusion: Optional[FusionPlan] = None
+    fifo: Optional[FifoPlan] = None
+
+
+@dataclass
+class DSEResult:
+    best: TrialResult
+    trials: List[TrialResult]
+
+    @property
+    def num_trials(self) -> int:
+        return len(self.trials)
+
+
+def modeled_latency_s(graph: DataflowGraph, fusion: FusionPlan,
+                      fifo: FifoPlan, platform: Platform) -> float:
+    """Analytic end-to-end latency of the fused dataflow design.
+
+    Dataflow makespan = max over kernels of (LP start time + kernel latency),
+    in cycles; inter-group edges round-trip external memory and are charged at
+    HBM bandwidth (this is exactly what stream fusion removes).
+    """
+    makespan_cycles = 0.0
+    for k in graph.kernels():
+        t = k.timing
+        if t is None:
+            continue
+        makespan_cycles = max(makespan_cycles,
+                              fifo.start_times[k.name] + t.latency)
+    dma_bytes = fusion.external_bytes(graph) * 2.0   # write + read back
+    dma_bytes += graph.total_weight_bytes()
+    return platform.seconds(makespan_cycles) + dma_bytes / platform.hbm_bw
+
+
+def evaluate_trial(ops: Sequence[LinalgOpSpec], platform: Platform,
+                   default_tile_size: int, overall_unroll_size: int,
+                   c_max: Optional[float] = None,
+                   strategy: str = "normal",
+                   keep_artifacts: bool = False) -> TrialResult:
+    """One full pass through fusion + FIFO sizing (spaces 2 and 3)."""
+    params = {"default_tile_size": default_tile_size,
+              "overall_unroll_size": overall_unroll_size}
+    c_max = c_max if c_max is not None else platform.fusion_budget()
+    space = TilingSpace(ops=list(ops), default_tile_size=default_tile_size,
+                        overall_unroll_size=overall_unroll_size)
+    graph = space.build_graph(platform)
+
+    def node_cost(g: DataflowGraph, name: str) -> float:
+        return g.kernel(name).local_bytes
+
+    fusion = explore_fusion(graph, c_max, node_cost=node_cost)
+    timings = {k.name: k.timing for k in graph.kernels()}
+    fifo = size_fifos(graph, timings, strategy=strategy)
+
+    onchip = sum(fusion.costs) + fifo.total_bytes
+    feasible = all(c <= c_max for c in fusion.costs)
+    latency = modeled_latency_s(graph, fusion, fifo, platform)
+    # Infeasibility: a single kernel exceeding C_max must shrink its tiling
+    # (paper §5.2.2 feedback); penalize proportionally so the explorer walks
+    # back toward smaller tiles/unrolls.
+    penalty = 0.0
+    if not feasible:
+        worst = max(fusion.costs)
+        penalty = latency * (worst / c_max)
+    return TrialResult(
+        params=params, score=latency + penalty, latency_s=latency,
+        onchip_bytes=onchip, external_bytes=fusion.external_bytes(graph),
+        num_groups=fusion.num_groups, feasible=feasible,
+        graph=graph if keep_artifacts else None,
+        fusion=fusion if keep_artifacts else None,
+        fifo=fifo if keep_artifacts else None)
+
+
+def explore(ops: Sequence[LinalgOpSpec], platform: Platform,
+            c_max: Optional[float] = None,
+            tile_candidates: Sequence[int] = (16, 32, 64, 128, 256),
+            unroll_candidates: Sequence[int] = (8, 16, 32, 64, 128, 256),
+            budget: int = 24, seed: int = 0,
+            strategy: str = "normal") -> DSEResult:
+    """Blackbox exploration (Optuna stand-in): seeded random sampling over the
+    log-2 lattice followed by coordinate hill-climbing around the incumbent."""
+    rng = random.Random(seed)
+    seen: Dict[Tuple[int, int], TrialResult] = {}
+
+    def run(ts: int, us: int) -> TrialResult:
+        key = (ts, us)
+        if key not in seen:
+            seen[key] = evaluate_trial(ops, platform, ts, us, c_max=c_max,
+                                       strategy=strategy)
+        return seen[key]
+
+    # Phase 1: random sampling (half the budget).
+    lattice = [(t, u) for t in tile_candidates for u in unroll_candidates]
+    rng.shuffle(lattice)
+    for ts, us in lattice[:max(1, budget // 2)]:
+        run(ts, us)
+
+    # Phase 2: coordinate hill-climb around the incumbent.
+    def neighbors(ts: int, us: int) -> List[Tuple[int, int]]:
+        ti = tile_candidates.index(ts) if ts in tile_candidates else 0
+        ui = unroll_candidates.index(us) if us in unroll_candidates else 0
+        out = []
+        for di in (-1, 1):
+            if 0 <= ti + di < len(tile_candidates):
+                out.append((tile_candidates[ti + di], us))
+            if 0 <= ui + di < len(unroll_candidates):
+                out.append((ts, unroll_candidates[ui + di]))
+        return out
+
+    while len(seen) < budget:
+        inc = min(seen.values(), key=lambda r: r.score)
+        moves = [n for n in neighbors(*inc.params.values()) if n not in seen]
+        if not moves:
+            break
+        run(*moves[0])
+
+    trials = sorted(seen.values(), key=lambda r: r.score)
+    best = trials[0]
+    # Re-run the winner keeping artifacts for downstream lowering.
+    best = evaluate_trial(ops, platform, **best.params, c_max=c_max,
+                          strategy=strategy, keep_artifacts=True)
+    return DSEResult(best=best, trials=trials)

@@ -1,0 +1,3 @@
+"""Deterministic sharded data pipeline."""
+from .pipeline import IGNORE, PipelineState, TokenPipeline
+__all__ = ["IGNORE", "PipelineState", "TokenPipeline"]

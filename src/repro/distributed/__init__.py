@@ -1,0 +1,18 @@
+"""Distribution layer: sharding rules, optimizer, step functions."""
+
+from .optimizer import (AdamWConfig, OptState, abstract_opt_state,
+                        adamw_update, init_opt_state, lr_schedule)
+from .sharding import (activation_spec, batch_spec, optimizer_specs,
+                       spec_for, tree_shardings, tree_specs)
+from .steps import (decode_inputs_abstract, input_specs, lower_cell,
+                    make_decode_step, make_prefill_step, make_train_step,
+                    train_batch_abstract)
+
+__all__ = [
+    "AdamWConfig", "OptState", "abstract_opt_state", "adamw_update",
+    "init_opt_state", "lr_schedule", "activation_spec", "batch_spec",
+    "optimizer_specs", "spec_for", "tree_shardings", "tree_specs",
+    "decode_inputs_abstract", "input_specs", "lower_cell",
+    "make_decode_step", "make_prefill_step", "make_train_step",
+    "train_batch_abstract",
+]

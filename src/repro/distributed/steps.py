@@ -1,0 +1,214 @@
+"""Jitted step functions: train / prefill / decode, with mesh shardings.
+
+``make_*`` builds the jitted function together with its in/out shardings from
+the logical-axis trees — the same entry points serve the smoke tests (1
+device), the multi-pod dry-run (512 placeholder devices, abstract inputs),
+and a real cluster launch.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import (abstract_cache, abstract_params, cache_logical_axes,
+                      decode_step, forward_train, logical_axes, padded_vocab,
+                      prefill)
+from .optimizer import AdamWConfig, OptState, abstract_opt_state, adamw_update
+from .sharding import (activation_spec, batch_spec, optimizer_specs,
+                       spec_for, tree_specs)
+
+Tree = Any
+
+
+# --------------------------------------------------------------------- #
+# Abstract inputs (the dry-run's ShapeDtypeStruct stand-ins)
+# --------------------------------------------------------------------- #
+
+def train_batch_abstract(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend != "none":
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                             jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.rope == "mrope":
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return out
+
+
+def decode_inputs_abstract(cfg: ModelConfig, shape: ShapeConfig
+                           ) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": abstract_cache(cfg, b, shape.seq_len),
+        "cache_pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Every model input for one dry-run cell, as ShapeDtypeStructs."""
+    if shape.kind == "decode":
+        return decode_inputs_abstract(cfg, shape)
+    return train_batch_abstract(cfg, shape)
+
+
+# --------------------------------------------------------------------- #
+# Train step
+# --------------------------------------------------------------------- #
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    remat: bool = True,
+                    pin_activations: object = False):
+    """Returns (jitted_fn, params_specs, opt_specs, batch_spec_fn).
+
+    fn(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    ``pin_activations``: False (baseline), True/'all' (pin every block
+    boundary batch-sharded), 'embed' (scan entry only), or 'sp'
+    (Megatron-style sequence parallelism: residual stream additionally
+    sharded over the model axis on the sequence dim).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    ax = logical_axes(cfg)
+    ab = abstract_params(cfg)
+    p_specs = tree_specs(cfg, ax, ab, mesh)
+    o_moment_specs = optimizer_specs(cfg, ax, ab, mesh)
+    o_specs = OptState(step=P(), mu=o_moment_specs, nu=o_moment_specs)
+    mode = ("all" if pin_activations is True else pin_activations) or None
+    act = None
+    scope = "all"
+    if mode:
+        spec = activation_spec(mesh)
+        if mode == "sp":
+            spec = P(spec[0], "model", None)     # sequence-parallel stream
+        act = NamedSharding(mesh, spec)
+        scope = "embed" if mode == "embed" else "all"
+
+    p_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                               is_leaf=lambda x: isinstance(x, P))
+
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            return forward_train(p, cfg, batch, remat=remat,
+                                 act_sharding=act, act_pin_scope=scope)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # Keep gradients in the parameter layout before the update.
+        grads = jax.lax.with_sharding_constraint(grads, p_shardings)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        new_params = jax.lax.with_sharding_constraint(new_params, p_shardings)
+        metrics = {"loss": loss, **metrics}
+        return new_params, new_opt, metrics
+
+    def b_specs(batch_abstract):
+        return batch_spec(cfg, batch_abstract, mesh)
+
+    jitted = jax.jit(
+        step_fn,
+        donate_argnums=(0, 1),
+    )
+    return jitted, p_specs, o_specs, b_specs
+
+
+# --------------------------------------------------------------------- #
+# Prefill / decode steps
+# --------------------------------------------------------------------- #
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    ax = logical_axes(cfg)
+    ab = abstract_params(cfg)
+    p_specs = tree_specs(cfg, ax, ab, mesh)
+
+    def fn(params, batch):
+        return prefill(params, cfg, batch)
+
+    def b_specs(batch_abstract):
+        return batch_spec(cfg, batch_abstract, mesh)
+
+    return jax.jit(fn), p_specs, b_specs
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    """serve_step: one new token against the KV/state caches."""
+    ax = logical_axes(cfg)
+    ab = abstract_params(cfg)
+    p_specs = tree_specs(cfg, ax, ab, mesh)
+    c_ax = cache_logical_axes(cfg, shape.global_batch, shape.seq_len)
+    c_ab = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_specs = tree_specs(cfg, c_ax, c_ab, mesh)
+    tok_spec = spec_for(cfg, ("batch", None), (shape.global_batch, 1), mesh)
+    len_spec = spec_for(cfg, ("batch",), (shape.global_batch,), mesh)
+
+    def fn(params, tokens, cache, cache_pos, lengths):
+        nt, logits, new_cache = decode_step(params, cfg, tokens, cache,
+                                            cache_pos, lengths)
+        return nt, new_cache
+
+    jitted = jax.jit(fn, donate_argnums=(2,))
+    in_specs = {"params": p_specs, "tokens": tok_spec, "cache": c_specs,
+                "cache_pos": P(), "lengths": len_spec}
+    return jitted, in_specs
+
+
+# --------------------------------------------------------------------- #
+# Lowering helpers used by the dry-run
+# --------------------------------------------------------------------- #
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               remat: bool = True, perf: object = False):
+    """Lower the right step function for one (arch x shape) cell with fully
+    abstract inputs.  Returns the ``jax.stages.Lowered``.
+
+    ``perf``: False = paper-faithful baseline; True/'all'/'embed'/'sp'
+    applies the §Perf optimization set (pin mode per make_train_step) plus
+    chunked wkv6 and per-chunk attention remat.
+    """
+    if perf:
+        from dataclasses import replace
+        cfg = replace(cfg, rwkv_chunk=16, remat_attn_chunk=True,
+                      kv_cache_layout="bhsd")
+
+    def shard(t, s):
+        return jax.tree.map(
+            lambda a, sp: jax.ShapeDtypeStruct(
+                a.shape, a.dtype, sharding=NamedSharding(mesh, sp)),
+            t, s, is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        fn, p_specs, o_specs, b_spec_fn = make_train_step(
+            cfg, mesh, remat=remat, pin_activations=perf)
+        ab = abstract_params(cfg)
+        batch = train_batch_abstract(cfg, shape)
+        bspecs = b_spec_fn(batch)
+        params = shard(ab, p_specs)
+        opt = shard(abstract_opt_state(ab), o_specs)
+        batch = shard(batch, bspecs)
+        return fn.lower(params, opt, batch)
+    if shape.kind == "prefill":
+        fn, p_specs, b_spec_fn = make_prefill_step(cfg, mesh)
+        ab = abstract_params(cfg)
+        batch = train_batch_abstract(cfg, shape)
+        batch.pop("labels", None)
+        bspecs = b_spec_fn(batch)
+        return fn.lower(shard(ab, p_specs), shard(batch, bspecs))
+    # decode
+    fn, in_specs = make_decode_step(cfg, mesh, shape)
+    inputs = decode_inputs_abstract(cfg, shape)
+    return fn.lower(shard(abstract_params(cfg), in_specs["params"]),
+                    shard(inputs["tokens"], in_specs["tokens"]),
+                    shard(inputs["cache"], in_specs["cache"]),
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                    shard(inputs["lengths"], in_specs["lengths"]))

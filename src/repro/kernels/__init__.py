@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Every kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec body,
+``ops.py`` the model-layout jitted wrappers, ``ref.py`` the pure-jnp oracle.
+Validated in interpret mode on CPU; TPU is the target (MXU-aligned blocks,
+VMEM scratch accumulators).
+"""
+
+from . import ref
+from .ops import (block_matmul, convert_layout, flash_attention,
+                  flash_attention_2d, mamba2_ssd_pallas, moe_experts_pallas,
+                  rmsnorm_matmul, streamed_ffn, streamed_mlp,
+                  streamed_xent_loss, streamed_xent_parts, wkv6_pallas)
+
+__all__ = [
+    "ref", "block_matmul", "convert_layout", "flash_attention",
+    "flash_attention_2d", "mamba2_ssd_pallas", "moe_experts_pallas",
+    "rmsnorm_matmul", "streamed_ffn", "streamed_mlp", "streamed_xent_loss",
+    "streamed_xent_parts", "wkv6_pallas",
+]

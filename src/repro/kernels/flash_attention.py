@@ -1,0 +1,125 @@
+"""Flash attention Pallas kernel — attention as a streaming dataflow.
+
+Grid (batch*kv_heads*group, q_blocks, kv_blocks); the kv dimension is the
+sequential inner loop carrying (m, l, acc) in VMEM scratch — the online
+softmax IS the paper's streaming pattern: score tiles are produced, consumed,
+and discarded without ever visiting HBM.  Causal masking skips fully-masked
+kv blocks with ``pl.when`` (no MXU work issued).
+
+Supports GQA (q heads grouped over kv heads), causal and sliding-window
+masks.  Head dim padded to the 128-lane width by the wrapper in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import interpret_default, pick_block
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_kv: int, block_q: int, block_kv: int, scale: float,
+                  causal: bool, window: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # Block-level skip: a kv block strictly after every query position of
+    # this q block contributes nothing under causal masking — no MXU work is
+    # issued for it.  This is where flash attention earns its O(S*w) local
+    # cost (window lower-bound masking is per-element below).
+    run = (k_start <= q_start + block_q - 1) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [bq, bkv]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[0] = acc_ref[0] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: int = 0,
+                       kv_len: Optional[int] = None,
+                       scale: Optional[float] = None,
+                       kv_group: int = 1,
+                       block_q: int = 512, block_kv: int = 512,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Flattened-head core: q [Hq_, Sq, D], k/v [Hkv_, Skv, D] where
+    ``Hq_ == Hkv_ * kv_group`` -> [Hq_, Sq, D].
+
+    GQA without K/V materialization: the KV BlockSpec index map sends the
+    ``kv_group`` query-head programs sharing a KV head to the SAME K/V
+    blocks (itensor view: the head dim is a *reuse* dim of the K/V stream —
+    Fig. 5(c) again).
+    """
+    h, sq, d = q.shape
+    _, skv, _ = k.shape
+    kv_len = kv_len if kv_len is not None else skv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = pick_block(sq, block_q)
+    bkv = pick_block(skv, block_kv)
+    grid = (h, sq // bq, skv // bkv)
+    interpret = interpret_default() if interpret is None else interpret
+    g = kv_group
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, n_kv=grid[2], block_q=bq, block_kv=bkv,
+            scale=scale, causal=causal, window=window, kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b // g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, bq, 1), jnp.float32),
+            pltpu.VMEM((1, bq, 1), jnp.float32),
+            pltpu.VMEM((1, bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

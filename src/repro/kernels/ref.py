@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.itensor import ITensorType
+
+
+def matmul_ref(x, w, out_dtype=None):
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(out_dtype or x.dtype)
+
+
+def _act(kind, x):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def ffn_ref(x, wg, wu, wd, activation="silu"):
+    x32 = x.astype(jnp.float32)
+    h = _act(activation, x32 @ wg.astype(jnp.float32)) * \
+        (x32 @ wu.astype(jnp.float32))
+    return (h @ wd.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_ref(x, wu, wd, activation="gelu"):
+    x32 = x.astype(jnp.float32)
+    h = _act(activation, x32 @ wu.astype(jnp.float32))
+    return (h @ wd.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_matmul_ref(x, scale, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps) * \
+        (1.0 + scale.astype(jnp.float32))
+    return (normed.astype(x.dtype).astype(jnp.float32)
+            @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, kv_len=None,
+                  scale=None):
+    """q: [B,Sq,Hq,D]; k/v: [B,Skv,Hkv,D] (GQA repeat)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * sc
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = kp <= qp
+    if window:
+        mask = jnp.logical_and(mask, kp > qp - window)
+    if kv_len is not None:
+        mask = jnp.logical_and(mask, kp < kv_len)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def xent_parts_ref(hidden, head, labels, vocab_size):
+    logits = (hidden.astype(jnp.float32) @ head.astype(jnp.float32))
+    vp = logits.shape[-1]
+    logits = jnp.where((jnp.arange(vp) >= vocab_size)[None], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse, gold
+
+
+def xent_loss_ref(hidden, head, labels, vocab_size):
+    lse, gold = xent_parts_ref(hidden, head, jnp.maximum(labels, 0),
+                               vocab_size)
+    valid = labels >= 0
+    nll = jnp.where(valid, lse - gold, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def mamba2_ref(x, dt, a_log, b, c, d_skip, init_state=None):
+    """Sequential recurrence oracle; shapes as layers.mamba2_ssd."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    state = (init_state.astype(jnp.float32) if init_state is not None
+             else jnp.zeros((bsz, h, p, n), jnp.float32))
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    b32, c32 = b.astype(jnp.float32), c.astype(jnp.float32)
+
+    def step(state, t):
+        da = jnp.exp(dt32[:, t] * a)
+        upd = jnp.einsum("bhp,bn->bhpn", x32[:, t] * dt32[:, t][..., None],
+                         b32[:, t])
+        state = state * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, c32[:, t])
+        return state, y + x32[:, t] * d_skip.astype(jnp.float32)[None, :,
+                                                                 None]
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state
+
+
+def wkv6_ref(r, k, v, w, u, init_state=None):
+    bsz, s, h, n = r.shape
+    state = (init_state.astype(jnp.float32) if init_state is not None
+             else jnp.zeros((bsz, h, n, n), jnp.float32))
+    r32, k32 = r.astype(jnp.float32), k.astype(jnp.float32)
+    v32, w32 = v.astype(jnp.float32), w.astype(jnp.float32)
+    u32 = u.astype(jnp.float32)
+
+    def step(state, t):
+        kv = jnp.einsum("bhk,bhv->bhkv", k32[:, t], v32[:, t])
+        y = jnp.einsum("bhk,bhkv->bhv", r32[:, t],
+                       state + u32[None, :, :, None] * kv)
+        return state * w32[:, t][..., None] + kv, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def moe_experts_ref(x, gates, wg, wu, wd, activation="silu"):
+    x32 = x.astype(jnp.float32)
+    gh = _act(activation, jnp.einsum("td,edf->tef", x32,
+                                     wg.astype(jnp.float32)))
+    uh = jnp.einsum("td,edf->tef", x32, wu.astype(jnp.float32))
+    y = jnp.einsum("tef,efd->ted", gh * uh, wd.astype(jnp.float32))
+    return jnp.einsum("ted,te->td", y,
+                      gates.astype(jnp.float32)).astype(x.dtype)
+
+
+def convert_layout_ref(data, src: ITensorType, dst: ITensorType):
+    """Consumer-order tile stream by direct slicing."""
+    tiles = []
+    for off in dst.stream_offsets():
+        idx = tuple(slice(o, o + e) for o, e in zip(off, dst.elem_shape))
+        tiles.append(data[idx])
+    return jnp.stack(tiles)

@@ -1,0 +1,55 @@
+"""Fused RMSNorm -> matmul kernel (norm streamed into the projection).
+
+The normalized activation never round-trips HBM: per token tile the kernel
+computes the row rsqrt statistics in VMEM and immediately feeds the
+normalized tile into the MXU against a [D, bn] weight tile.  Grid
+(t_blocks, n_blocks); the full D row is kept resident (D <= ~8k fits VMEM
+comfortably at bt=256: 256*8192*2B = 4 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import interpret_default, pick_block
+
+
+def _kernel(x_ref, scale_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    normed = x * jax.lax.rsqrt(var + eps)
+    normed = normed * (1.0 + scale_ref[...].astype(jnp.float32))
+    o_ref[...] = jnp.dot(normed.astype(x_ref.dtype), w_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def rmsnorm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
+                   eps: float = 1e-6, block_t: int = 256,
+                   block_n: int = 512,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """x: [T, D]; scale: [D]; w: [D, N] -> rms_norm(x) @ w  [T, N]."""
+    t, d = x.shape
+    d2, n = w.shape
+    assert d == d2 and scale.shape == (d,)
+    bt = pick_block(t, block_t)
+    bn = pick_block(n, block_n)
+    grid = (t // bt, n // bn)
+    interpret = interpret_default() if interpret is None else interpret
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=interpret,
+    )(x, scale, w)

@@ -1,0 +1,123 @@
+"""Stream-fused GLU FFN — the canonical StreamTensor kernel fusion.
+
+Computes ``down( act(x @ Wg) * (x @ Wu) )`` with the [T, d_ff] intermediate
+living ONLY in VMEM: grid (t_blocks, f_blocks) where the f dimension is the
+sequential inner loop.  Per (t, f) step the kernel produces one intermediate
+tile, immediately consumes it against the matching Wd tile, and accumulates
+the [bt, d_model] output in a VMEM scratch — producer (gate/up matmuls) and
+consumer (down matmul) are *stream-fused* exactly as the paper fuses Kernel0
+into Kernel1 through an on-chip buffer instead of external memory.
+
+The itensor view: the intermediate's type is
+    itensor<bt x bf, [T/bt, F/bf] * [bt, bf], (d0,d1)->(d0,d1)>
+for both producer and consumer — types match, so fusion needs no layout
+converter and the FIFO collapses to a single VMEM tile (itensor folding,
+paper §4.3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import interpret_default, pick_block
+
+
+def _act(kind: str, x):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+                n_f: int, activation: str):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    gate = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    up = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = (_act(activation, gate) * up).astype(x.dtype)   # stays in VMEM
+    acc_ref[...] += jnp.dot(h, wd_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == n_f - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def streamed_ffn(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+                 *, activation: str = "silu",
+                 block_t: int = 256, block_f: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """x: [T, D]; wg/wu: [D, F]; wd: [F, D] -> [T, D]."""
+    t, d = x.shape
+    d2, f = wg.shape
+    assert d == d2 and wu.shape == (d, f) and wd.shape == (f, d)
+    bt = pick_block(t, block_t)
+    bf = pick_block(f, block_f)
+    grid = (t // bt, f // bf)
+    interpret = interpret_default() if interpret is None else interpret
+
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, n_f=grid[1], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wd)
+
+
+def streamed_mlp(x: jax.Array, wu: jax.Array, wd: jax.Array, *,
+                 activation: str = "gelu",
+                 block_t: int = 256, block_f: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Ungated variant (GPT-2 / HuBERT): down(act(x @ Wu))."""
+    t, d = x.shape
+    _, f = wu.shape
+
+    def kernel(x_ref, wu_ref, wd_ref, o_ref, acc_ref, *, n_f: int):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        h = _act(activation,
+                 jnp.dot(x_ref[...], wu_ref[...],
+                         preferred_element_type=jnp.float32)).astype(x.dtype)
+        acc_ref[...] += jnp.dot(h, wd_ref[...],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(1) == n_f - 1)
+        def _done():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    bt = pick_block(t, block_t)
+    bf = pick_block(f, block_f)
+    grid = (t // bt, f // bf)
+    interpret = interpret_default() if interpret is None else interpret
+    return pl.pallas_call(
+        functools.partial(kernel, n_f=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
+        interpret=interpret,
+    )(x, wu, wd)

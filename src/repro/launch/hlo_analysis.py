@@ -1,0 +1,441 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE (verified in
+tests/test_hlo_analysis.py), so a scanned 24-layer model under-reports flops
+by ~the layer count.  Post-optimization HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on while ops, which lets us
+do it right: parse the module into computations, cost each one (dot flops
+from contracting dims, ~1 flop/element for elementwise/reduce, fusion
+boundary bytes, collective payloads), and multiply nested computation costs
+through while trip counts.
+
+Collective link-traffic model (per device, ring algorithms):
+    all-gather:         result_bytes - operand_bytes
+    reduce-scatter:     operand_bytes - result_bytes
+    all-reduce:         2 * operand_bytes * (n-1)/n
+    all-to-all:         operand_bytes * (n-1)/n
+    collective-permute: operand_bytes
+The brief's plain "sum of operand sizes" is also reported (``operand_bytes``).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "sign", "floor", "ceil", "round",
+    "cosine", "sine", "logistic", "atan2", "remainder", "select", "clamp",
+    "compare", "and", "or", "xor", "not", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic",
+}
+FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "reshape", "transpose", "copy", "copy-start",
+    "copy-done", "broadcast", "iota", "convert", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "reverse", "gather",
+    "scatter", "after-all", "custom-call", "rng-bit-generator", "domain",
+    "partition-id", "replica-id", "optimization-barrier",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[float, float]:
+    elems, total = 0.0, 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_link: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_operand: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_count: int = 0
+
+    def add(self, other: "Cost", factor: float = 1.0) -> None:
+        self.flops += factor * other.flops
+        self.bytes += factor * other.bytes
+        for k in COLLECTIVES:
+            self.coll_link[k] += factor * other.coll_link[k]
+            self.coll_operand[k] += factor * other.coll_operand[k]
+        self.coll_count += int(factor * other.coll_count)
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # operands + attributes (raw tail of the line)
+
+    def operands(self) -> List[str]:
+        # Operand list = %names up to the closing paren of the op call.
+        depth, out, cur = 0, [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            cur.append(ch)
+        arglist = "".join(cur)
+        return re.findall(r"%([\w.\-]+)", arglist)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and line.rstrip().endswith("{"):
+                cur = hdr.group(2)
+                self.computations[cur] = []
+                if hdr.group(1):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                self.computations[cur].append(
+                    Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+
+    # ------------------------------------------------------------------ #
+    def _sym(self, comp: str) -> Dict[str, str]:
+        return {i.name: i.type_str for i in self.computations[comp]}
+
+    def _dot_flops(self, instr: Instr, sym: Dict[str, str]) -> float:
+        out_elems, _ = _shape_elems_bytes(instr.type_str)
+        ops = instr.operands()
+        contracted = 1.0
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+        if m and ops:
+            lhs_type = sym.get(ops[0], "")
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci:
+                        contracted *= dims[int(ci)]
+        return 2.0 * out_elems * contracted
+
+    def _root_opcode(self, comp: str) -> str:
+        for instr in reversed(self.computations.get(comp, [])):
+            return instr.opcode
+        return ""
+
+    def _sliced_param_bytes(self, callee: str) -> Dict[int, float]:
+        """Fusion parameters consumed ONLY through (dynamic-)slice ops ->
+        bytes actually read (sum of slice results).  This is the scan-xs
+        pattern: the fused body slices one step's window out of the stacked
+        input; counting the full stacked array per loop iteration inflates
+        the memory term by the trip count."""
+        instrs = self.computations.get(callee, [])
+        param_of: Dict[str, int] = {}
+        for i in instrs:
+            if i.opcode == "parameter":
+                m = re.match(r"(\d+)", i.rest)
+                if m:
+                    param_of[i.name] = int(m.group(1))
+        sliced: Dict[int, float] = {}
+        disqualified: set = set()
+        for i in instrs:
+            if i.opcode == "parameter":
+                continue
+            ops = i.operands()
+            for pos, o in enumerate(ops):
+                if o not in param_of:
+                    continue
+                idx = param_of[o]
+                if i.opcode in ("dynamic-slice", "slice") and pos == 0:
+                    _, rb = _shape_elems_bytes(i.type_str)
+                    sliced[idx] = sliced.get(idx, 0.0) + rb
+                else:
+                    disqualified.add(idx)
+        return {k: v for k, v in sliced.items() if k not in disqualified}
+
+    def _fusion_bytes(self, instr: Instr, sym: Dict[str, str],
+                      callees: List[str]) -> float:
+        """Boundary bytes of a fusion, aware of in-place slice updates.
+
+        A fusion rooted at ``dynamic-update-slice`` aliases its big operand
+        with its output and touches only the updated window — counting the
+        full buffer on both sides (XLA's own convention) inflates KV-cache
+        writes by seq_len/1.  Similarly (dynamic-)slice-consumed operands
+        (scan xs) only read their window.
+        """
+        _, rb = _shape_elems_bytes(instr.type_str)
+        op_names = instr.operands()
+        op_bytes = [(_shape_elems_bytes(sym[o])[1] if o in sym else 0.0)
+                    for o in op_names]
+        sliced = self._sliced_param_bytes(callees[0]) if callees else {}
+        for idx, b in sliced.items():
+            if idx < len(op_bytes):
+                op_bytes[idx] = min(op_bytes[idx], b)
+        root = self._root_opcode(callees[0]) if callees else ""
+        if root == "dynamic-update-slice" or "dynamic-update-slice" in \
+                instr.name:
+            # Exclude the aliased full buffer (one operand ~= result bytes);
+            # the written window ~= the largest remaining operand.
+            rest = sorted(op_bytes)
+            for i, b in enumerate(rest):
+                if abs(b - rb) <= 0.01 * max(rb, 1.0):
+                    rest.pop(i)
+                    break
+            else:
+                if rest:
+                    rest.pop()          # fall back: drop the largest
+            win = max(rest) if rest else 0.0
+            return sum(rest) + win
+        if root in ("dynamic-slice", "slice", "gather") or \
+                instr.name.startswith(("dynamic-slice", "slice", "gather")):
+            small = [b for b in op_bytes if b <= 4.0 * max(rb, 1.0)]
+            return sum(small) + 2.0 * rb
+        return sum(op_bytes) + rb
+
+    def _group_size(self, instr: Instr) -> int:
+        m = _GROUP_LIST_RE.search(instr.rest)
+        if m:
+            return len(m.group(1).split(","))
+        m = _GROUP_IOTA_RE.search(instr.rest)
+        if m:
+            return int(m.group(2))
+        return 2
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        cost = Cost()
+        self._memo[name] = cost           # break accidental cycles
+        sym = self._sym(name)
+
+        def operand_bytes(instr: Instr) -> float:
+            total = 0.0
+            for op in instr.operands():
+                if op in sym:
+                    total += _shape_elems_bytes(sym[op])[1]
+            return total
+
+        for instr in self.computations.get(name, []):
+            opc = instr.opcode
+            base = opc[:-6] if opc.endswith("-start") else opc
+            base = base[:-5] if base.endswith("-done") else base
+            if opc.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                ob = operand_bytes(instr)
+                _, rb = _shape_elems_bytes(instr.type_str)
+                if opc.endswith("-start"):
+                    rb = max(0.0, rb - ob)   # start result = (operand, out)
+                n = self._group_size(instr)
+                frac = (n - 1) / n if n > 1 else 0.0
+                if base == "all-gather":
+                    link = max(0.0, rb - ob)
+                elif base == "reduce-scatter":
+                    link = max(0.0, ob - rb)
+                elif base == "all-reduce":
+                    link = 2.0 * ob * frac
+                elif base == "all-to-all":
+                    link = ob * frac
+                else:                        # collective-permute
+                    link = ob
+                cost.coll_link[base] += link
+                cost.coll_operand[base] += ob
+                cost.coll_count += 1
+                cost.bytes += ob + rb
+                continue
+            if opc == "while":
+                trip = 1
+                m = _TRIP_RE.search(instr.rest)
+                if m:
+                    trip = int(m.group(1))
+                sub = Cost()
+                for cm in _CALL_RE.finditer(instr.rest):
+                    sub.add(self.comp_cost(cm.group(1)))
+                cost.add(sub, factor=trip)
+                continue
+            if opc == "conditional":
+                m = _BRANCH_RE.search(instr.rest)
+                branches = (re.findall(r"%([\w.\-]+)", m.group(1))
+                            if m else [c.group(1) for c in
+                                       _CALL_RE.finditer(instr.rest)])
+                subs = [self.comp_cost(b) for b in branches]
+                if subs:
+                    worst = max(subs, key=lambda c: c.flops + c.bytes)
+                    cost.add(worst)
+                continue
+            if opc in ("fusion", "call", "async-start", "map"):
+                callees = []
+                for cm in _CALL_RE.finditer(instr.rest):
+                    callees.append(cm.group(1))
+                    sub = self.comp_cost(cm.group(1))
+                    # Fusion internals contribute flops but only boundary
+                    # bytes (internals live in registers).
+                    cost.flops += sub.flops
+                    for k in COLLECTIVES:
+                        cost.coll_link[k] += sub.coll_link[k]
+                        cost.coll_operand[k] += sub.coll_operand[k]
+                    cost.coll_count += sub.coll_count
+                cost.bytes += self._fusion_bytes(instr, sym, callees)
+                continue
+            if opc == "dot":
+                cost.flops += self._dot_flops(instr, sym)
+                _, rb = _shape_elems_bytes(instr.type_str)
+                cost.bytes += operand_bytes(instr) + rb
+                continue
+            if opc == "convolution":
+                out_elems, rb = _shape_elems_bytes(instr.type_str)
+                kb = operand_bytes(instr)
+                cost.flops += 2.0 * out_elems  # lower bound; convs unused
+                cost.bytes += kb + rb
+                continue
+            if opc in ("reduce", "reduce-window", "sort", "select-and-scatter"):
+                ob = operand_bytes(instr)
+                _, rb = _shape_elems_bytes(instr.type_str)
+                elems = sum(_shape_elems_bytes(sym[o])[0]
+                            for o in instr.operands() if o in sym)
+                cost.flops += elems
+                cost.bytes += ob + rb
+                continue
+            if opc in ELEMENTWISE:
+                elems, rb = _shape_elems_bytes(instr.type_str)
+                cost.flops += elems
+                # Inside fusions this is register traffic; at top level the
+                # op reads/writes memory.  Count it — top-level elementwise
+                # ops are rare post-fusion.
+                cost.bytes += operand_bytes(instr) + rb
+                continue
+            # FREE and anything unrecognized: no flops; no bytes.
+        return cost
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    """Loop-aware per-device totals for a compiled SPMD module."""
+    mod = HloModule(text)
+    c = mod.entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes_accessed": c.bytes,
+        "collective_link_bytes": dict(c.coll_link),
+        "collective_operand_bytes": dict(c.coll_operand),
+        "collective_link_total": sum(c.coll_link.values()),
+        "collective_operand_total": sum(c.coll_operand.values()),
+        "collective_count": c.coll_count,
+        "num_computations": len(mod.computations),
+    }
+
+
+def top_items(text: str, n: int = 20, kind: str = "bytes"
+              ) -> List[Tuple[float, str, str]]:
+    """Trip-scaled heaviest instructions — the §Perf profiling view.
+
+    Returns [(cost, 'op @ trip_factor', metadata-op-name)] sorted desc.
+    ``kind``: 'bytes' | 'flops' | 'collective'.
+    """
+    mod = HloModule(text)
+    items: List[Tuple[float, str, str]] = []
+
+    def walk(comp: str, factor: float) -> None:
+        sym = mod._sym(comp)
+        for instr in mod.computations.get(comp, []):
+            opc = instr.opcode
+            if opc.endswith("-done"):
+                continue
+            base = opc[:-6] if opc.endswith("-start") else opc
+            if opc == "while":
+                trip = 1
+                m = _TRIP_RE.search(instr.rest)
+                if m:
+                    trip = int(m.group(1))
+                for cm in _CALL_RE.finditer(instr.rest):
+                    walk(cm.group(1), factor * trip)
+                continue
+            if opc in ("fusion", "call", "async-start", "conditional", "map"):
+                callees = [cm.group(1)
+                           for cm in _CALL_RE.finditer(instr.rest)]
+                for callee in callees:
+                    sub = mod.comp_cost(callee)
+                    if kind == "flops" and sub.flops:
+                        items.append((factor * sub.flops,
+                                      f"{instr.name} [{opc}] x{factor:g}",
+                                      instr.type_str[:60]))
+                if kind == "bytes":
+                    b = mod._fusion_bytes(instr, sym, callees)
+                    items.append((factor * b,
+                                  f"{instr.name} [{opc}] x{factor:g}",
+                                  instr.type_str[:60]))
+                continue
+            single = Cost()
+            tmp = HloModule.__new__(HloModule)  # reuse costing of one instr
+            # Simplest: cost a synthetic one-instruction computation.
+            tmp.computations = {"_one": [instr]}
+            tmp.entry = "_one"
+            tmp._memo = {}
+            # Patch symbol lookup to the real computation's table.
+            tmp._sym = lambda name, _sym_tbl=sym: _sym_tbl  # type: ignore
+            one = tmp.comp_cost("_one")
+            val = {"bytes": one.bytes, "flops": one.flops,
+                   "collective": sum(one.coll_link.values())}[kind]
+            if val:
+                items.append((factor * val,
+                              f"{instr.name} [{opc}] x{factor:g}",
+                              instr.type_str[:60]))
+
+    if mod.entry:
+        walk(mod.entry, 1.0)
+    items.sort(key=lambda t: -t[0])
+    return items[:n]

@@ -1,0 +1,129 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per the brief:
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` supplies FLOPs/bytes; collective bytes are parsed from the
+compiled HLO text by summing operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops.  MODEL_FLOPS uses
+6*N*D (dense) or 6*N_active*D (MoE) for train, 2*N*D for inference steps.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Optional
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+# TPU v5e constants from the brief.
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Bytes of every 'dtype[dims]' occurrence in the string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind over the whole module.
+
+    Shapes in SPMD-partitioned HLO are *per-device*, so the totals are bytes
+    held per device per collective — with the brief's
+    ``collective_bytes / (chips * link_bw)`` convention, total collective
+    bytes = per-device sum x chips, and the division by chips recovers the
+    per-device value computed here.  '-start'/'-done' pairs are counted once.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _KINDS}
+    counts: Dict[str, int] = {k: 0 for k in _KINDS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        head, _, rest = line.partition("=")
+        for kind in _KINDS:
+            # Result shape sits between '=' and the op name.
+            idx = rest.find(f" {kind}(")
+            sidx = rest.find(f" {kind}-start(")
+            if idx < 0 and sidx < 0:
+                continue
+            cut = idx if idx >= 0 else sidx
+            shape_str = rest[:cut]
+            b = _shape_bytes(shape_str)
+            if sidx >= 0:
+                # start op result is (operand, result[, scratch]) tuple:
+                # halve to count the transferred payload once.
+                b *= 0.5
+            out[kind] += b
+            counts[kind] += 1
+            break
+    out["total"] = sum(out[k] for k in _KINDS)
+    out["counts"] = counts  # type: ignore
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D for train, 2*N*D per generated/prefilled token otherwise."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_from_compiled(cfg: ModelConfig, shape: ShapeConfig,
+                           rec: Dict, *, chips: int) -> Dict[str, float]:
+    flops = rec["cost"]["flops"]
+    bytes_accessed = rec["cost"]["bytes_accessed"]
+    coll = rec["collectives"]["total"]
+    # cost_analysis on an SPMD module reports per-partition numbers.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bound = max(terms, key=terms.get).replace("_s", "")
+    mf = model_flops(cfg, shape)
+    hlo_total_flops = flops * chips
+    return {
+        **terms,
+        "bound": bound,
+        "step_s_lower_bound": max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops_per_chip": flops,
+        "useful_flops_ratio": (mf / hlo_total_flops
+                               if hlo_total_flops else 0.0),
+        "mfu_upper_bound": (mf / (chips * PEAK_FLOPS)
+                            / max(terms.values())
+                            if max(terms.values()) > 0 else 0.0),
+    }

@@ -1,0 +1,538 @@
+"""The language model: embedding -> pattern-group scan -> head.
+
+Three entry points (DESIGN.md §7):
+  * ``forward_train``  — full-sequence forward returning the streamed
+    (chunked-over-sequence) cross-entropy loss; logits [B,S,V] are never
+    materialized (the paper's streaming idea applied to the loss).
+  * ``prefill``        — full-sequence forward returning last-position logits
+    and the decode caches (KV / SSM state / RWKV state).
+  * ``decode_step``    — one token against the caches.
+
+Layers are applied as a ``lax.scan`` over *pattern groups* (stacked params
+from ``params.py``), keeping the HLO small and compile times manageable at
+54 layers; remainder layers run unrolled.  Zamba2's shared attention block is
+closed over by the scan body (single parameter copy, per-application caches).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .params import padded_vocab
+
+Tree = Any
+
+
+def _c(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Cast to compute dtype (bf16); norms re-promote internally."""
+    return x.astype(jnp.bfloat16) if cfg.dtype == "bfloat16" else x
+
+
+def _cast_tree(cfg: ModelConfig, t: Tree) -> Tree:
+    return jax.tree.map(lambda a: _c(cfg, a) if a.dtype == jnp.float32 else a,
+                        t)
+
+
+def _chunk_of(n: int, want: int) -> int:
+    c = min(want, n)
+    while n % c != 0:
+        c = math.gcd(n, c)
+    return max(1, c)
+
+
+# --------------------------------------------------------------------- #
+# Block application (full-sequence mode)
+# --------------------------------------------------------------------- #
+
+def _qk_normed(cfg: ModelConfig, p: Tree, q: jax.Array,
+               k: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    if not cfg.qk_norm:
+        return q, k
+    return (L.rms_norm(q, p["q_norm"]), L.rms_norm(k, p["k_norm"]))
+
+
+def _attn_full(cfg: ModelConfig, p: Tree, x: jax.Array,
+               positions: jax.Array, *, window: int,
+               collect: bool) -> Tuple[jax.Array, Optional[Tree]]:
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q, k = _qk_normed(cfg, p, q, k)
+    q = L.apply_positional(cfg.rope, q, positions, cfg.rope_theta)
+    k = L.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
+    if window:
+        o = L.local_attention(q, k, v, window=window,
+                              remat_chunk=cfg.remat_attn_chunk)
+    else:
+        o = L.streaming_attention(q, k, v, causal=cfg.causal,
+                                  remat_chunk=cfg.remat_attn_chunk)
+    out = o.reshape(b, s, hq * hd) @ p["wo"]
+    if collect:
+        if cfg.kv_cache_layout == "bhsd":
+            return out, {"k": k.transpose(0, 2, 1, 3),
+                         "v": v.transpose(0, 2, 1, 3)}
+        return out, {"k": k, "v": v}
+    return out, None
+
+
+def _ffn_apply(cfg: ModelConfig, p: Tree, x: jax.Array) -> jax.Array:
+    if cfg.is_moe:
+        return L.moe_ffn(x, p, activation=cfg.activation,
+                         gated=cfg.gated_ffn, num_experts=cfg.num_experts,
+                         top_k=cfg.top_k)
+    return L.ffn(x, p, activation=cfg.activation, gated=cfg.gated_ffn)
+
+
+def _attn_block_full(cfg: ModelConfig, p: Tree, x: jax.Array,
+                     positions: jax.Array, *, window: int = 0,
+                     collect: bool = False) -> Tuple[jax.Array, Optional[Tree]]:
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    attn_out, kv = _attn_full(cfg, p["attn"], h, positions, window=window,
+                              collect=collect)
+    x = x + attn_out
+    h2 = L.apply_norm(cfg.norm, x, p["ln2"])
+    x = x + _ffn_apply(cfg, p["mlp"], h2)
+    return x, kv
+
+
+def _mamba_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
+                      collect: bool = False) -> Tuple[jax.Array, Optional[Tree]]:
+    b, s, d = x.shape
+    m = p["mamba"]
+    h = L.apply_norm(cfg.norm, x, p["ln"])
+    xin = h @ m["wx"]                                      # [B,S,di]
+    z = h @ m["wz"]
+    bmat = h @ m["wb"]                                     # [B,S,N]
+    cmat = h @ m["wc"]
+    dt = jax.nn.softplus(h @ m["wdt"]
+                         + m["dt_bias"].astype(h.dtype))   # [B,S,H]
+    xconv, conv_tail = L.causal_conv1d(xin, m["conv_w"], m["conv_b"])
+    hps = xconv.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
+    chunk = _chunk_of(s, 128)
+    y, state = L.mamba2_ssd(hps, dt, m["a_log"], bmat, cmat, m["d_skip"],
+                            chunk=chunk)
+    y = y.reshape(b, s, cfg.d_inner) * jax.nn.silu(z)
+    x = x + y @ m["wout"]
+    aux = {"ssm": state.astype(jnp.float32),
+           "conv": conv_tail} if collect else None
+    return x, aux
+
+
+def _rwkv_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
+                     collect: bool = False) -> Tuple[jax.Array, Optional[Tree]]:
+    b, s, d = x.shape
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_dim
+    tm, cm = p["tm"], p["cm"]
+    # Time mix.
+    xa = L.apply_norm(cfg.norm, x, p["ln1"])
+    xs = L.token_shift(xa)
+
+    def mix(name):
+        mu = tm[f"mix_{name}"].astype(xa.dtype)
+        return xa * mu + xs * (1.0 - mu)
+
+    r = (mix("r") @ tm["wr"]).reshape(b, s, h, n)
+    k = (mix("k") @ tm["wk"]).reshape(b, s, h, n)
+    v = (mix("v") @ tm["wv"]).reshape(b, s, h, n)
+    g = jax.nn.silu(mix("g") @ tm["wg"])
+    wdec = jnp.exp(-jnp.exp(
+        (mix("w") @ tm["ww"]).astype(jnp.float32)
+        + tm["w_bias"].reshape(1, 1, h * n))).reshape(b, s, h, n)
+    if cfg.rwkv_chunk > 0:
+        y, state = L.wkv6_chunked(r, k, v, wdec, tm["u"],
+                                  chunk=cfg.rwkv_chunk)
+    else:
+        y, state = L.wkv6(r, k, v, wdec, tm["u"])
+    y = (y.reshape(b, s, d) * g) @ tm["wo"]
+    x = x + y
+    # Channel mix.
+    xc = L.apply_norm(cfg.norm, x, p["ln2"])
+    xcs = L.token_shift(xc)
+
+    def cmix(name):
+        mu = cm[f"mix_{name}"].astype(xc.dtype)
+        return xc * mu + xcs * (1.0 - mu)
+
+    kk = jnp.square(jax.nn.relu(cmix("k") @ cm["wk"]))
+    rr = jax.nn.sigmoid(cmix("r") @ cm["wr"])
+    x = x + rr * (kk @ cm["wv"])
+    aux = None
+    if collect:
+        aux = {"wkv": state, "tm_shift": xa[:, -1], "cm_shift": xc[:, -1]}
+    return x, aux
+
+
+def _apply_block_full(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
+                      x: jax.Array, positions: jax.Array,
+                      collect: bool) -> Tuple[jax.Array, Tree]:
+    if kind == "rwkv":
+        return _rwkv_block_full(cfg, p, x, collect=collect)
+    if kind == "mamba":
+        return _mamba_block_full(cfg, p, x, collect=collect)
+    if kind == "mamba+shared_attn":
+        x, aux = _mamba_block_full(cfg, p, x, collect=collect)
+        x, kv = _attn_block_full(cfg, shared, x, positions, collect=collect)
+        if collect:
+            aux = {**aux, **kv}
+        return x, aux
+    window = cfg.sliding_window if kind == "local_attn" else 0
+    return _attn_block_full(cfg, p, x, positions, window=window,
+                            collect=collect)
+
+
+# --------------------------------------------------------------------- #
+# Full-sequence backbone
+# --------------------------------------------------------------------- #
+
+def _embed_in(cfg: ModelConfig, params: Tree, batch: Dict[str, jax.Array],
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x [B,S,D], positions)."""
+    if "embeds" in batch:
+        x = _c(cfg, batch["embeds"])
+        b, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _c(cfg, jnp.take(params["embed"], tokens, axis=0))
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.rope == "mrope":
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = jnp.broadcast_to(base[None], (3, b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.rope == "none" and "pos_embed" in params:
+        x = x + _c(cfg, params["pos_embed"][:s][None])
+    return x, positions
+
+
+def forward_hidden(params: Tree, cfg: ModelConfig,
+                   batch: Dict[str, jax.Array], *,
+                   remat: bool = True,
+                   act_sharding=None,
+                   act_pin_scope: str = "all") -> jax.Array:
+    """Embedding + all blocks + final norm -> hidden states [B,S,D].
+
+    ``act_sharding``: optional NamedSharding pinning the residual stream
+    (§Perf: without a pin, GSPMD is free to shuttle the f32 norm
+    intermediates across the model axis — measured as f32 activation
+    all-gathers/all-reduces per layer on llama3-8b).  ``act_pin_scope``:
+    'all' pins every block boundary, 'embed' only the scan entry.
+    """
+    pin_all = act_sharding is not None and act_pin_scope == "all"
+    pin = ((lambda a: jax.lax.with_sharding_constraint(a, act_sharding))
+           if act_sharding is not None else (lambda a: a))
+    pin_block = pin if pin_all else (lambda a: a)
+    params = _cast_tree(cfg, params)
+    x, positions = _embed_in(cfg, params, batch)
+    x = pin(x)
+    period = len(cfg.layer_pattern)
+    groups = cfg.num_layers // period
+    shared = params.get("shared")
+
+    def group_body(x, block_params: Tuple[Tree, ...]) -> Tuple[jax.Array, None]:
+        for pidx in range(period):
+            kind = cfg.layer_pattern[pidx]
+            x, _ = _apply_block_full(cfg, kind, block_params[pidx], shared,
+                                     x, positions, collect=False)
+            x = pin_block(x)
+        return x, None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    if groups > 0:
+        x, _ = lax.scan(body, x, params["blocks"])
+    for i, bp in enumerate(params["rest"]):
+        kind = cfg.layer_kind(groups * period + i)
+        x, _ = _apply_block_full(cfg, kind, bp, shared, x, positions,
+                                 collect=False)
+        x = pin_block(x)
+    return L.apply_norm(cfg.norm, x, params["final_norm"])
+
+
+# --------------------------------------------------------------------- #
+# Streamed cross-entropy (chunked over sequence)
+# --------------------------------------------------------------------- #
+
+def streamed_xent(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                  vocab_size: int, chunk: int = 256) -> jax.Array:
+    """Mean CE without materializing [B,S,V] logits.
+
+    hidden: [B,S,D]; head: [D,Vp] (vocab possibly padded); labels: [B,S]
+    with -100 = ignore.  Sequence is processed in chunks via ``lax.scan`` —
+    the paper's streaming applied to the loss layer.
+    """
+    b, s, d = hidden.shape
+    vp = head.shape[-1]
+    c = _chunk_of(s, chunk)
+    nc = s // c
+    hc = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    pad_mask = (jnp.arange(vp) >= vocab_size)[None, None]
+
+    def step(carry, inp):
+        tot, cnt = carry
+        h, y = inp                                    # [B,c,D], [B,c]
+        logits = (h @ head).astype(jnp.float32)       # [B,c,Vp]
+        logits = jnp.where(pad_mask, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        valid = y >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (tot + nll.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.float32(0.0), jnp.int32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def forward_train(params: Tree, cfg: ModelConfig,
+                  batch: Dict[str, jax.Array], *,
+                  remat: bool = True, act_sharding=None,
+                  act_pin_scope: str = "all") -> jax.Array:
+    """Streamed-CE training loss."""
+    hidden = forward_hidden(params, cfg, batch, remat=remat,
+                            act_sharding=act_sharding,
+                            act_pin_scope=act_pin_scope)
+    head = _c(cfg, params["lm_head"])
+    return streamed_xent(hidden, head, batch["labels"], cfg.vocab_size)
+
+
+# --------------------------------------------------------------------- #
+# Prefill
+# --------------------------------------------------------------------- #
+
+def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            ) -> Tuple[jax.Array, Tree]:
+    """Forward pass that also returns decode caches (sized at the prompt
+    length; the serving layer places them into max-length buffers)."""
+    params = _cast_tree(cfg, params)
+    x, positions = _embed_in(cfg, params, batch)
+    period = len(cfg.layer_pattern)
+    groups = cfg.num_layers // period
+    shared = params.get("shared")
+
+    def group_body(x, block_params):
+        auxes = []
+        for pidx in range(period):
+            kind = cfg.layer_pattern[pidx]
+            x, aux = _apply_block_full(cfg, kind, block_params[pidx], shared,
+                                       x, positions, collect=True)
+            auxes.append(aux)
+        return x, tuple(auxes)
+
+    caches_rest = []
+    if groups > 0:
+        x, caches_blocks = lax.scan(group_body, x, params["blocks"])
+    else:
+        caches_blocks = ()
+    for i, bp in enumerate(params["rest"]):
+        kind = cfg.layer_kind(groups * period + i)
+        x, aux = _apply_block_full(cfg, kind, bp, shared, x, positions,
+                                   collect=True)
+        caches_rest.append(jax.tree.map(lambda a: a[None], aux))
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = (x[:, -1:] @ _c(cfg, params["lm_head"])).astype(jnp.float32)
+    vp = logits.shape[-1]
+    logits = jnp.where((jnp.arange(vp) >= cfg.vocab_size)[None, None],
+                       -1e30, logits)
+    return logits, {"blocks": caches_blocks, "rest": tuple(caches_rest)}
+
+
+# --------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------- #
+
+def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
+                       cache: Tree, cache_pos: jax.Array,
+                       lengths: jax.Array, *, window: int = 0,
+                       ) -> Tuple[jax.Array, Tree]:
+    """x: [B,1,D]; cache: {"k","v"} [B,Smax,Hkv,hd]."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    ap = p["attn"]
+    q = h @ ap["wq"]
+    k = h @ ap["wk"]
+    v = h @ ap["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = q.reshape(b, 1, hq, hd)
+    k = k.reshape(b, 1, hkv, hd)
+    v = v.reshape(b, 1, hkv, hd)
+    q, k = _qk_normed(cfg, ap, q, k)
+    pos = jnp.broadcast_to(jnp.reshape(cache_pos, (1, 1)), (b, 1))
+    if cfg.rope == "mrope":
+        pos3 = jnp.broadcast_to(pos[None], (3, b, 1))
+        q = L.apply_positional(cfg.rope, q, pos3, cfg.rope_theta)
+        k = L.apply_positional(cfg.rope, k, pos3, cfg.rope_theta)
+    else:
+        q = L.apply_positional(cfg.rope, q, pos, cfg.rope_theta)
+        k = L.apply_positional(cfg.rope, k, pos, cfg.rope_theta)
+    if cfg.kv_cache_layout == "bhsd":
+        kc = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+            cache_pos, axis=2)
+        vc = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+            cache_pos, axis=2)
+    else:
+        kc = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+    o = L.decode_attention(q, kc, vc, lengths + 1, window=window,
+                           layout=cfg.kv_cache_layout)
+    x = x + o.reshape(b, 1, hq * hd) @ ap["wo"]
+    h2 = L.apply_norm(cfg.norm, x, p["ln2"])
+    x = x + _ffn_apply(cfg, p["mlp"], h2)
+    return x, {"k": kc, "v": vc}
+
+
+def _mamba_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
+                        cache: Tree) -> Tuple[jax.Array, Tree]:
+    b = x.shape[0]
+    m = p["mamba"]
+    h = L.apply_norm(cfg.norm, x, p["ln"])[:, 0]           # [B,D]
+    xin = h @ m["wx"]
+    z = h @ m["wz"]
+    bmat = h @ m["wb"]
+    cmat = h @ m["wc"]
+    dt = jax.nn.softplus(h @ m["wdt"] + m["dt_bias"].astype(h.dtype))
+    # Conv state update: cache["conv"] holds the previous K-1 inputs.
+    conv_in = jnp.concatenate([cache["conv"],
+                               xin[:, None].astype(cache["conv"].dtype)],
+                              axis=1)                      # [B,K,di]
+    w = m["conv_w"]
+    y = jnp.einsum("bkd,kd->bd", conv_in.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    xconv = jax.nn.silu(y + m["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    hps = xconv.reshape(b, cfg.ssm_heads, cfg.ssm_head_dim)
+    yssm, state = L.mamba2_decode_step(hps, dt, m["a_log"], bmat, cmat,
+                                       m["d_skip"], cache["ssm"])
+    yin = yssm.reshape(b, cfg.d_inner) * jax.nn.silu(z)
+    x = x + (yin @ m["wout"])[:, None]
+    return x, {"ssm": state, "conv": conv_in[:, 1:]}
+
+
+def _rwkv_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
+                       cache: Tree) -> Tuple[jax.Array, Tree]:
+    b = x.shape[0]
+    h, n, d = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    tm, cm = p["tm"], p["cm"]
+    xa = L.apply_norm(cfg.norm, x, p["ln1"])[:, 0]
+    xs = cache["tm_shift"].astype(xa.dtype)
+
+    def mix(name):
+        mu = tm[f"mix_{name}"].astype(xa.dtype)
+        return xa * mu + xs * (1.0 - mu)
+
+    r = (mix("r") @ tm["wr"]).reshape(b, 1, h, n)
+    k = (mix("k") @ tm["wk"]).reshape(b, 1, h, n)
+    v = (mix("v") @ tm["wv"]).reshape(b, 1, h, n)
+    g = jax.nn.silu(mix("g") @ tm["wg"])
+    wdec = jnp.exp(-jnp.exp(
+        (mix("w") @ tm["ww"]).astype(jnp.float32)
+        + tm["w_bias"].reshape(1, h * n))).reshape(b, 1, h, n)
+    y, state = L.wkv6(r, k, v, wdec, tm["u"],
+                      init_state=cache["wkv"])
+    y = (y.reshape(b, d) * g) @ tm["wo"]
+    x = x + y[:, None]
+    xc = L.apply_norm(cfg.norm, x, p["ln2"])[:, 0]
+    xcs = cache["cm_shift"].astype(xc.dtype)
+
+    def cmix(name):
+        mu = cm[f"mix_{name}"].astype(xc.dtype)
+        return xc * mu + xcs * (1.0 - mu)
+
+    kk = jnp.square(jax.nn.relu(cmix("k") @ cm["wk"]))
+    rr = jax.nn.sigmoid(cmix("r") @ cm["wr"])
+    x = x + (rr * (kk @ cm["wv"]))[:, None]
+    new = {"wkv": state, "tm_shift": xa.astype(cache["tm_shift"].dtype),
+           "cm_shift": xc.astype(cache["cm_shift"].dtype)}
+    return x, new
+
+
+def _apply_block_decode(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
+                        x: jax.Array, cache: Tree, cache_pos: jax.Array,
+                        lengths: jax.Array) -> Tuple[jax.Array, Tree]:
+    if kind == "rwkv":
+        return _rwkv_block_decode(cfg, p, x, cache)
+    if kind == "mamba":
+        return _mamba_block_decode(cfg, p, x, cache)
+    if kind == "mamba+shared_attn":
+        mamba_cache = {"ssm": cache["ssm"], "conv": cache["conv"]}
+        attn_cache = {"k": cache["k"], "v": cache["v"]}
+        x, nm = _mamba_block_decode(cfg, p, x, mamba_cache)
+        x, na = _attn_block_decode(cfg, shared, x, attn_cache, cache_pos,
+                                   lengths)
+        return x, {**nm, **na}
+    window = cfg.sliding_window if kind == "local_attn" else 0
+    return _attn_block_decode(cfg, p, x, cache, cache_pos, lengths,
+                              window=window)
+
+
+def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
+                cache: Tree, cache_pos: jax.Array, lengths: jax.Array,
+                ) -> Tuple[jax.Array, jax.Array, Tree]:
+    """One decoding step.
+
+    tokens: [B,1] int32; cache: pytree from ``init_cache``/``prefill``;
+    cache_pos: scalar int32 write position; lengths: [B] valid lengths.
+    Returns (next_tokens [B,1], logits [B,1,Vp], new_cache).
+    """
+    params = _cast_tree(cfg, params)
+    x = _c(cfg, jnp.take(params["embed"], tokens, axis=0))
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.rope == "none" and "pos_embed" in params:
+        x = x + _c(cfg, params["pos_embed"])[cache_pos][None, None]
+    period = len(cfg.layer_pattern)
+    groups = cfg.num_layers // period
+    shared = params.get("shared")
+
+    def group_body(x, inp):
+        block_params, cache_g = inp
+        new_caches = []
+        for pidx in range(period):
+            kind = cfg.layer_pattern[pidx]
+            x, nc = _apply_block_decode(cfg, kind, block_params[pidx],
+                                        shared, x, cache_g[pidx], cache_pos,
+                                        lengths)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if groups > 0:
+        x, new_blocks = lax.scan(group_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    else:
+        new_blocks = ()
+    new_rest = []
+    for i, bp in enumerate(params["rest"]):
+        kind = cfg.layer_kind(groups * period + i)
+        c_i = jax.tree.map(lambda a: a[0], cache["rest"][i])
+        x, nc = _apply_block_decode(cfg, kind, bp, shared, x, c_i,
+                                    cache_pos, lengths)
+        new_rest.append(jax.tree.map(lambda a: a[None], nc))
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = (x @ _c(cfg, params["lm_head"])).astype(jnp.float32)
+    vp = logits.shape[-1]
+    logits = jnp.where((jnp.arange(vp) >= cfg.vocab_size)[None, None],
+                       -1e30, logits)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_cache = {"blocks": new_blocks, "rest": tuple(new_rest)}
+    return next_tokens, logits, new_cache

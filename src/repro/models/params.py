@@ -1,0 +1,366 @@
+"""Parameter & cache definitions: shapes, logical sharding axes, init.
+
+Every parameter is declared once as a ``ParamDef`` (shape + logical axes +
+init rule); from the definition tree we derive
+  * ``init_params``     — materialized f32 master weights (smoke tests,
+    examples; big models are never materialized on this host),
+  * ``abstract_params`` — ``jax.ShapeDtypeStruct`` stand-ins (dry-run),
+  * ``logical_axes``    — the logical-axis pytree the distributed layer maps
+    to mesh ``PartitionSpec``s with divisibility fallbacks.
+
+Layer stacking: layers are grouped into repeating *pattern groups* (period =
+sliding/shared-attn pattern, 1 for homogeneous stacks) and stacked over the
+group axis for ``lax.scan``; remainder layers (L % period) are kept unstacked.
+Zamba2's shared attention block is a single unstacked copy (true parameter
+sharing).
+
+Sharding deviation (documented in DESIGN.md §10): tied input/output
+embeddings are stored untied — the input table shards over d_model (local
+gather) while the LM head shards over vocab (Megatron-style streamed CE) —
+because one array cannot carry both layouts without a per-step all-gather.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+Tree = Any
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal|zeros|ones|a_log|dt_bias|decay|pos
+    fan_in: Optional[int] = None
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _mat(d_in: int, d_out: int, ax_in: str, ax_out: str) -> ParamDef:
+    return ParamDef((d_in, d_out), (ax_in, ax_out), "normal", fan_in=d_in)
+
+
+def _vec(n: int, ax: Optional[str] = None, init: str = "zeros") -> ParamDef:
+    return ParamDef((n,), (ax,), init)
+
+
+def _norm_defs(cfg: ModelConfig, d: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = d or cfg.d_model
+    out = {"scale": _vec(d)}
+    if cfg.norm == "layernorm":
+        out["bias"] = _vec(d)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Block definitions
+# --------------------------------------------------------------------- #
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, dq, dkv, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim_
+    out = {
+        "wq": _mat(d, dq, "d_model", "q_dim"),
+        "wk": _mat(d, dkv, "d_model", "kv_dim"),
+        "wv": _mat(d, dkv, "d_model", "kv_dim"),
+        "wo": _mat(dq, d, "q_dim", "d_model"),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = _vec(dq, "q_dim")
+        out["bk"] = _vec(dkv, "kv_dim")
+        out["bv"] = _vec(dkv, "kv_dim")
+    if cfg.qk_norm:
+        out["q_norm"] = _vec(hd)
+        out["k_norm"] = _vec(hd)
+    return out
+
+
+def _ffn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.is_moe:
+        e = cfg.num_experts
+        out = {
+            "wr": _mat(d, e, "d_model", "experts"),
+            "wu": ParamDef((e, d, f), ("experts", "d_model", "d_ff"),
+                           "normal", fan_in=d),
+            "wd": ParamDef((e, f, d), ("experts", "d_ff", "d_model"),
+                           "normal", fan_in=f),
+        }
+        if cfg.gated_ffn:
+            out["wg"] = ParamDef((e, d, f), ("experts", "d_model", "d_ff"),
+                                 "normal", fan_in=d)
+        return out
+    out = {"wu": _mat(d, f, "d_model", "d_ff"),
+           "wd": _mat(f, d, "d_ff", "d_model")}
+    if cfg.gated_ffn:
+        out["wg"] = _mat(d, f, "d_model", "d_ff")
+    return out
+
+
+def _mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, k = cfg.ssm_heads, cfg.ssm_state, cfg.conv_width
+    return {
+        "wx": _mat(d, di, "d_model", "d_inner"),
+        "wz": _mat(d, di, "d_model", "d_inner"),
+        "wb": _mat(d, n, "d_model", None),
+        "wc": _mat(d, n, "d_model", None),
+        "wdt": _mat(d, h, "d_model", "ssm_heads"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), "dt_bias"),
+        "a_log": ParamDef((h,), ("ssm_heads",), "a_log"),
+        "d_skip": ParamDef((h,), ("ssm_heads",), "ones"),
+        "conv_w": ParamDef((k, di), (None, "d_inner"), "normal", fan_in=k),
+        "conv_b": _vec(di, "d_inner"),
+        "wout": _mat(di, d, "d_inner", "d_model"),
+    }
+
+
+def _rwkv_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_dim
+    tm = {f"mix_{nm}": _vec(d, init="ones") for nm in "rkvgw"}
+    tm.update({
+        "wr": _mat(d, d, "d_model", "rwkv_dim"),
+        "wk": _mat(d, d, "d_model", "rwkv_dim"),
+        "wv": _mat(d, d, "d_model", "rwkv_dim"),
+        "wg": _mat(d, d, "d_model", "rwkv_dim"),
+        "ww": _mat(d, d, "d_model", "rwkv_dim"),
+        "w_bias": ParamDef((h, n), ("rwkv_heads", None), "decay"),
+        "u": ParamDef((h, n), ("rwkv_heads", None), "zeros"),
+        "wo": _mat(d, d, "rwkv_dim", "d_model"),
+    })
+    cm = {
+        "mix_k": _vec(d, init="ones"),
+        "mix_r": _vec(d, init="ones"),
+        "wk": _mat(d, f, "d_model", "d_ff"),
+        "wv": _mat(f, d, "d_ff", "d_model"),
+        "wr": _mat(d, d, "d_model", "rwkv_dim"),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> Dict[str, Tree]:
+    """Parameter definition tree for one layer of the given kind."""
+    if kind == "rwkv":
+        return {"ln1": _norm_defs(cfg), "ln2": _norm_defs(cfg),
+                **_rwkv_defs(cfg)}
+    if kind.startswith("mamba"):
+        # Shared-attn params live OUTSIDE the stack (single copy).
+        return {"ln": _norm_defs(cfg), "mamba": _mamba_defs(cfg)}
+    # attention kinds: attn | local_attn | global_attn
+    return {"ln1": _norm_defs(cfg), "attn": _attn_defs(cfg),
+            "ln2": _norm_defs(cfg), "mlp": _ffn_defs(cfg)}
+
+
+def shared_block_defs(cfg: ModelConfig) -> Dict[str, Tree]:
+    """Zamba2 shared attention+MLP block (one copy, applied every k layers)."""
+    ffn_cfg = cfg if not cfg.is_moe else cfg
+    return {"ln1": _norm_defs(cfg), "attn": _attn_defs(cfg),
+            "ln2": _norm_defs(cfg), "mlp": _ffn_defs(ffn_cfg)}
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Tree]:
+    vp = padded_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    period = len(cfg.layer_pattern)
+    groups, rest = divmod(cfg.num_layers, period)
+
+    defs: Dict[str, Tree] = {}
+    # Input embedding table: vocab dim deliberately UNSHARDED ("embed_vocab")
+    # so the token gather stays device-local; the feature dim shards over the
+    # model axis instead ("embed_dim") and the activation all-gathers.  The
+    # LM head shards over vocab for Megatron-style streamed CE.  This is why
+    # tied embeddings are stored untied (DESIGN.md §10).
+    if cfg.frontend == "none" or not cfg.encoder_only:
+        # Modality-frontend archs still embed generated tokens at decode.
+        defs["embed"] = ParamDef((vp, d), ("embed_vocab", "embed_dim"),
+                                 "normal", fan_in=d)
+    if cfg.rope == "none" and not cfg.rwkv:
+        defs["pos_embed"] = ParamDef((32_768, d), (None, "embed_dim"),
+                                     "normal", fan_in=d)
+
+    # Pattern-group stack: one subtree per position in the period, every leaf
+    # stacked over the group axis.
+    def stack(defs_tree: Tree) -> Tree:
+        return jax.tree.map(
+            lambda pd: ParamDef((groups,) + pd.shape, ("layers",) + pd.axes,
+                                pd.init, pd.fan_in, pd.dtype),
+            defs_tree,
+            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    defs["blocks"] = tuple(
+        stack(block_defs(cfg, cfg.layer_pattern[p])) for p in range(period))
+    defs["rest"] = tuple(
+        block_defs(cfg, cfg.layer_kind(groups * period + i))
+        for i in range(rest))
+    if cfg.shared_attn_every:
+        defs["shared"] = shared_block_defs(cfg)
+
+    defs["final_norm"] = _norm_defs(cfg)
+    defs["lm_head"] = ParamDef((d, vp), ("d_model", "vocab"), "normal",
+                               fan_in=d)
+    return defs
+
+
+# --------------------------------------------------------------------- #
+# Materialization
+# --------------------------------------------------------------------- #
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(pd: ParamDef, key: jax.Array) -> jax.Array:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, pd.dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, pd.dtype)
+    if pd.init == "a_log":
+        h = pd.shape[-1]
+        base = jnp.linspace(1.0, 16.0, h)
+        return jnp.broadcast_to(jnp.log(base), pd.shape).astype(pd.dtype)
+    if pd.init == "dt_bias":
+        # inverse softplus of dt ~ logspace(1e-3, 1e-1)
+        h = pd.shape[-1]
+        dt = jnp.exp(jnp.linspace(math.log(1e-3), math.log(1e-1), h))
+        return jnp.broadcast_to(jnp.log(jnp.expm1(dt)),
+                                pd.shape).astype(pd.dtype)
+    if pd.init == "decay":
+        n = pd.shape[-1]
+        base = jnp.linspace(-6.0, -0.5, n)
+        return jnp.broadcast_to(base, pd.shape).astype(pd.dtype)
+    scale = 1.0 / math.sqrt(pd.fan_in or pd.shape[0])
+    return (jax.random.normal(key, pd.shape, jnp.float32)
+            * scale).astype(pd.dtype)
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Tree:
+    defs = model_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(pd, k) for pd, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    return jax.tree.map(lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype),
+                        model_defs(cfg), is_leaf=_is_def)
+
+
+def logical_axes(cfg: ModelConfig) -> Tree:
+    return jax.tree.map(lambda pd: pd.axes, model_defs(cfg), is_leaf=_is_def)
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    total = 0
+    for pd in jax.tree.leaves(model_defs(cfg), is_leaf=_is_def):
+        total += math.prod(pd.shape) * jnp.dtype(pd.dtype).itemsize
+    return total
+
+
+# --------------------------------------------------------------------- #
+# Decode caches
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class CacheDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+
+
+def _attn_cache(cfg: ModelConfig, groups: int, batch: int,
+                max_len: int) -> Dict[str, CacheDef]:
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+    if cfg.kv_cache_layout == "bhsd":
+        # Attention-native layout (§Perf I5c): the decode einsum consumes
+        # the cache directly — no per-token full-cache transpose copy.
+        shape = (groups, batch, hkv, max_len, hd)
+        axes = ("layers", "kv_batch", "kv_heads", "kv_seq", None)
+    else:
+        shape = (groups, batch, max_len, hkv, hd)
+        axes = ("layers", "kv_batch", "kv_seq", "kv_heads", None)
+    return {"k": CacheDef(shape, axes), "v": CacheDef(shape, axes)}
+
+
+def _mamba_cache(cfg: ModelConfig, groups: int, batch: int) -> Dict[str, CacheDef]:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "ssm": CacheDef((groups, batch, h, p, n),
+                        ("layers", "kv_batch", "ssm_heads", None, None),
+                        jnp.float32),
+        "conv": CacheDef((groups, batch, cfg.conv_width - 1, cfg.d_inner),
+                         ("layers", "kv_batch", None, "d_inner")),
+    }
+
+
+def _rwkv_cache(cfg: ModelConfig, groups: int, batch: int) -> Dict[str, CacheDef]:
+    h, n, d = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "wkv": CacheDef((groups, batch, h, n, n),
+                        ("layers", "kv_batch", "rwkv_heads", None, None),
+                        jnp.float32),
+        "tm_shift": CacheDef((groups, batch, d),
+                             ("layers", "kv_batch", None)),
+        "cm_shift": CacheDef((groups, batch, d),
+                             ("layers", "kv_batch", None)),
+    }
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    """Decode-state definition tree, mirroring the block structure."""
+    period = len(cfg.layer_pattern)
+    groups, rest = divmod(cfg.num_layers, period)
+
+    def one(kind: str, g: int) -> Dict[str, Tree]:
+        if kind == "rwkv":
+            return _rwkv_cache(cfg, g, batch)
+        if kind == "mamba":
+            return _mamba_cache(cfg, g, batch)
+        if kind == "mamba+shared_attn":
+            return {**_mamba_cache(cfg, g, batch),
+                    **_attn_cache(cfg, g, batch, max_len)}
+        return _attn_cache(cfg, g, batch, max_len)
+
+    return {
+        "blocks": tuple(one(cfg.layer_pattern[p], groups)
+                        for p in range(period)),
+        "rest": tuple(one(cfg.layer_kind(groups * period + i), 1)
+                      for i in range(rest)),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    return jax.tree.map(
+        lambda cd: jnp.zeros(cd.shape, cd.dtype),
+        cache_defs(cfg, batch, max_len),
+        is_leaf=lambda x: isinstance(x, CacheDef))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    return jax.tree.map(
+        lambda cd: jax.ShapeDtypeStruct(cd.shape, cd.dtype),
+        cache_defs(cfg, batch, max_len),
+        is_leaf=lambda x: isinstance(x, CacheDef))
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    return jax.tree.map(lambda cd: cd.axes,
+                        cache_defs(cfg, batch, max_len),
+                        is_leaf=lambda x: isinstance(x, CacheDef))

@@ -1,0 +1,5 @@
+"""Runtime layer: dataflow simulator, serving loop, fault-tolerant runner."""
+
+from .simulator import SimResult, simulate_dataflow
+
+__all__ = ["SimResult", "simulate_dataflow"]

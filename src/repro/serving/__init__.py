@@ -1,0 +1,3 @@
+"""Serving runtime: batched prefill/decode engine."""
+from .engine import Request, ServingEngine
+__all__ = ["Request", "ServingEngine"]

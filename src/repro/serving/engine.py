@@ -1,0 +1,120 @@
+"""Serving engine: prefill + batched greedy decode with slot management.
+
+A deliberately small continuous-batching engine (the serving twin of the
+trainer): requests enter a queue, get assigned cache slots, prefill fills a
+slot's KV/state, and one jitted decode step advances every active slot per
+tick.  Works on CPU for the examples/tests and under any mesh for a real
+deployment (the decode step is the dry-run's serve_step).
+
+Decode-cache note: slots share one max_len cache allocation; prefill caches
+(sized at the prompt) are padded in.  All sequences in a tick share the
+write position (static-shape decode); per-slot lengths mask attention.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import decode_step, init_cache, prefill
+
+Tree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [S] int32 (or embeds [S, D])
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+
+def _pad_cache_seq(cache: Tree, max_len: int) -> Tree:
+    def pad(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):
+            pad_n = max_len - a.shape[2]
+            return jnp.pad(a, ((0, 0), (0, 0), (0, pad_n), (0, 0), (0, 0)))
+        return a
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+class ServingEngine:
+    """Batched greedy generation over a fixed slot count."""
+
+    def __init__(self, cfg: ModelConfig, params: Tree, *,
+                 batch_slots: int = 4, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        def _step(p, t, c, pos, lens):
+            nt, _logits, new_cache = decode_step(p, cfg, t, c, pos, lens)
+            return nt, new_cache
+        self._decode = jax.jit(_step)
+        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+        self.metrics: Dict[str, float] = {"ticks": 0, "generated": 0}
+
+    # -------------------------------------------------------------- API
+    def generate(self, prompts: List[np.ndarray],
+                 max_new_tokens: int = 16) -> List[Request]:
+        """Serve a list of same-length prompts with continuous batching."""
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new_tokens,
+                        submitted_at=time.perf_counter())
+                for i, p in enumerate(prompts)]
+        pending = list(reqs)
+        while pending:
+            wave, pending = (pending[:self.slots], pending[self.slots:])
+            self._serve_wave(wave)
+        return reqs
+
+    # ------------------------------------------------------------ waves
+    def _serve_wave(self, wave: List[Request]) -> None:
+        b = len(wave)
+        plen = wave[0].prompt.shape[0]
+        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in wave]))}
+        logits, cache = self._prefill(self.params, batch)
+        cache = _pad_cache_seq(cache, self.max_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        now = time.perf_counter()
+        for r, t in zip(wave, np.asarray(next_tok)[:, 0]):
+            r.out_tokens.append(int(t))
+            r.first_token_at = now
+        lengths = jnp.full((b,), plen, jnp.int32)
+        pos = plen
+        steps = max(r.max_new_tokens for r in wave) - 1
+        for _ in range(steps):
+            if pos >= self.max_len:
+                break
+            next_tok, cache = self._decode(self.params, next_tok, cache,
+                                           jnp.int32(pos), lengths)
+            now = time.perf_counter()
+            for r, t in zip(wave, np.asarray(next_tok)[:, 0]):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(t))
+            pos += 1
+            lengths = lengths + 1
+            self.metrics["ticks"] += 1
+            self.metrics["generated"] += b
+        now = time.perf_counter()
+        for r in wave:
+            r.done = True
+            r.finished_at = now

@@ -1,0 +1,7 @@
+"""Training substrate: checkpointing, fault-tolerant trainer."""
+from .checkpoint import (AsyncCheckpointer, latest_checkpoint,
+                         restore_checkpoint, save_checkpoint)
+from .trainer import StepDeadlineExceeded, Trainer, TrainerConfig
+__all__ = ["AsyncCheckpointer", "latest_checkpoint", "restore_checkpoint",
+           "save_checkpoint", "StepDeadlineExceeded", "Trainer",
+           "TrainerConfig"]

@@ -1,0 +1,152 @@
+"""Multi-device distribution tests (run under forced host devices).
+
+``conftest.py`` keeps the default single-device environment; these tests
+skip unless launched with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the CI invocation in README/EXPERIMENTS does both runs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.distributed import (batch_spec, make_train_step, optimizer_specs,
+                               spec_for, tree_specs)
+from repro.distributed.compression import (dequantize_int8,
+                                           make_compressed_allreduce,
+                                           quantize_int8)
+from repro.distributed.optimizer import init_opt_state
+from repro.launch.mesh import make_mesh
+from repro.models import abstract_params, init_params, logical_axes
+
+multi = pytest.mark.skipif(len(jax.devices()) < 8,
+                           reason="needs 8 forced host devices")
+
+
+def _mesh():
+    return make_mesh((2, 4), ("data", "model"))
+
+
+# ------------------------------------------------------------- sharding
+
+def test_spec_divisibility_fallbacks():
+    cfg = get_config("gemma3-4b")   # 8 q heads: not divisible by model=16
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # With model=1 everything replicates (no fallback needed; sanity).
+    s = spec_for(cfg, ("d_model", "q_dim"), (2560, 2560), mesh)
+    assert s == P(None, "model")
+
+
+@multi
+def test_quantum_aware_head_sharding():
+    cfg = get_config("llama3-8b")
+    mesh = _mesh()   # model axis = 4; 32 heads % 4 == 0 -> sharded
+    s = spec_for(cfg, ("d_model", "q_dim"), (4096, 4096), mesh)
+    assert s == P(None, "model")
+    cfg_vl = get_config("qwen2-vl-2b")  # 12 heads % 4 == 0 -> sharded
+    s2 = spec_for(cfg_vl, ("d_model", "q_dim"), (1536, 1536), mesh)
+    assert s2 == P(None, "model")
+    # head_dim quantum: 6 heads on 4-way axis would split heads -> None.
+    from dataclasses import replace
+    cfg6 = replace(cfg_vl, num_heads=6, head_dim=256)
+    s3 = spec_for(cfg6, ("d_model", "q_dim"), (1536, 1536), mesh)
+    assert s3 == P(None, None)
+
+
+@multi
+def test_moe_expert_fallback_to_dff():
+    from dataclasses import replace
+    mesh = _mesh()
+    cfg = get_config("granite-moe-3b-a800m")   # 40 experts % 4 == 0 here
+    s = spec_for(cfg, ("experts", "d_model", "d_ff"), (40, 1536, 512), mesh)
+    assert s == P("model", None, None)
+    cfg42 = replace(cfg, num_experts=42)       # 42 % 4 != 0 -> d_ff shards
+    s2 = spec_for(cfg42, ("experts", "d_model", "d_ff"), (42, 1536, 512),
+                  mesh)
+    assert s2 == P(None, None, "model")
+
+
+@multi
+def test_zero1_optimizer_claims_data_axis():
+    cfg = get_config("llama3-8b")
+    mesh = _mesh()
+    ax = logical_axes(cfg)
+    ab = abstract_params(cfg)
+    p = tree_specs(cfg, ax, ab, mesh)
+    o = optimizer_specs(cfg, ax, ab, mesh)
+    wq_p = p["blocks"][0]["attn"]["wq"]
+    wq_o = o["blocks"][0]["attn"]["wq"]
+    assert "data" not in str(wq_p)
+    assert "data" in str(wq_o)      # moments additionally data-sharded
+
+
+@multi
+def test_batch_1_replicates():
+    cfg = get_config("zamba2-2.7b")
+    mesh = _mesh()
+    s = spec_for(cfg, ("batch", None), (1, 1), mesh)
+    assert s == P(None, None)
+
+
+# ----------------------------------------------- sharded training parity
+
+@multi
+def test_sharded_train_matches_single_device():
+    cfg = get_config("qwen3-0.6b").reduced()
+    shape = ShapeConfig("t", 64, 4, "train")
+    batch_np = {
+        "tokens": np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (4, 64)).astype(np.int32),
+        "labels": np.random.default_rng(1).integers(
+            0, cfg.vocab_size, (4, 64)).astype(np.int32),
+    }
+
+    def run(mesh):
+        fn, p_specs, o_specs, b_fn = make_train_step(cfg, mesh)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        params = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), p_specs,
+            is_leaf=lambda x: isinstance(x, P)))
+        opt = init_opt_state(params)
+        specs = b_fn(batch_np)
+        batch = {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+                 for k, v in batch_np.items()}
+        for _ in range(2):
+            params, opt, metrics = fn(params, opt, batch)
+        return float(metrics["loss"])
+
+    l1 = run(make_mesh((1, 1), ("data", "model")))
+    l8 = run(_mesh())
+    assert abs(l1 - l8) < 5e-3
+
+
+# --------------------------------------------------- gradient compression
+
+def test_int8_quantization_roundtrip():
+    x = jnp.linspace(-3.0, 3.0, 128)
+    q, s = quantize_int8(x)
+    err = x - dequantize_int8(q, s)
+    assert float(jnp.abs(err).max()) <= float(s) * 0.51 + 1e-6
+
+
+@multi
+def test_compressed_allreduce_with_error_feedback():
+    mesh = make_mesh((8,), ("data",))
+    reduce_fn = make_compressed_allreduce(mesh, "data")
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    exact = grads["w"]   # replicated input -> mean == itself
+    mean, err = reduce_fn(grads)
+    rel = float(jnp.linalg.norm(mean["w"] - exact)
+                / jnp.linalg.norm(exact))
+    assert rel < 0.02                      # int8: ~1% error
+    # Error feedback: applying the reduce twice with the carried error
+    # cancels bias — the accumulated estimate converges to the truth.
+    est = mean["w"]
+    mean2, _ = reduce_fn(grads, err)
+    est2 = 0.5 * (est + mean2["w"])
+    rel2 = float(jnp.linalg.norm(est2 - exact) / jnp.linalg.norm(exact))
+    assert rel2 <= rel + 1e-6

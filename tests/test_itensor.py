@@ -1,0 +1,179 @@
+"""Unit + property tests for the itensor type system (paper §3.1, Fig. 5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (AffineMap, ITensorType, col_major, fig5_b, fig5_c,
+                        itensor_from_tiling, row_major)
+
+
+class TestAffineMap:
+    def test_identity(self):
+        m = AffineMap.identity(3)
+        assert m.apply((1, 2, 3)) == (1, 2, 3)
+        assert m.is_identity() and m.is_permutation()
+
+    def test_transpose(self):
+        m = AffineMap.transpose2d()
+        assert m.apply((7, 9)) == (9, 7)
+
+    def test_projection_reuse_dims(self):
+        m = AffineMap(3, (2, 0))  # Fig. 5(c) map
+        assert m.reuse_dims == (1,)
+        assert m.apply((10, 20, 30)) == (30, 10)
+
+    def test_injectivity_enforced(self):
+        with pytest.raises(ValueError):
+            AffineMap(2, (0, 0))
+
+    def test_compose_permutation_roundtrip(self):
+        m = AffineMap(3, (2, 0))
+        ident = m.compose_permutation((0, 1, 2))
+        assert ident == m
+
+
+class TestFig5Examples:
+    """The three layouts in paper Fig. 5 with their exact index sequences."""
+
+    def test_fig5_b_stream_order(self):
+        t = fig5_b()
+        offsets = list(t.stream_offsets())
+        # Paper: indices [0,0], [4,0], [0,2], [4,2], ... (transposed walk).
+        assert offsets[:4] == [(0, 0), (4, 0), (0, 2), (4, 2)]
+        assert len(offsets) == 8
+        assert t.data_shape == (8, 8)
+        assert t.num_tokens == 8
+        assert t.reuse_factor == 1
+
+    def test_fig5_c_stream_order(self):
+        t = fig5_c()
+        offsets = list(t.stream_offsets())
+        # Paper: [0,0], [4,0], [0,0], [4,0], [0,2], ... (d1 re-iterates).
+        assert offsets[:5] == [(0, 0), (4, 0), (0, 0), (4, 0), (0, 2)]
+        assert t.data_shape == (8, 8)
+        assert t.num_tokens == 16
+        assert t.reuse_factor == 2
+
+    def test_case1_match_case2_mismatch(self):
+        # Two producers with identical types stream-connect (Case 1)...
+        assert fig5_b().matches(fig5_b())
+        # ...but (b) and (c) mismatch and need a converter (Case 2).
+        assert not fig5_b().matches(fig5_c())
+
+
+class TestConstructors:
+    def test_row_major_covers_in_order(self):
+        t = row_major((8, 8), (4, 2))
+        offsets = list(t.stream_offsets())
+        assert offsets[:5] == [(0, 0), (0, 2), (0, 4), (0, 6), (4, 0)]
+
+    def test_col_major_matches_fig5b(self):
+        t = col_major((8, 8), (4, 2))
+        assert list(t.stream_offsets()) == list(fig5_b().stream_offsets())
+
+    def test_reuse_insertion_matches_fig5c(self):
+        t = itensor_from_tiling((8, 8), (4, 2), loop_order=(1, 0),
+                                reuse=[(1, 2)])
+        assert list(t.stream_offsets()) == list(fig5_c().stream_offsets())
+
+    def test_indivisible_rejected(self):
+        with pytest.raises(ValueError):
+            itensor_from_tiling((8, 8), (3, 2))
+
+    def test_overlap_rejected(self):
+        with pytest.raises(ValueError):
+            ITensorType((4, 4), (4, 2), (2, 4), AffineMap(2, (1, 0)))
+
+
+class TestTokenAccounting:
+    def test_bytes(self):
+        t = row_major((64, 64), (16, 16), dtype="bfloat16")
+        assert t.num_tokens == 16
+        assert t.token_bytes == 16 * 16 * 2
+        assert t.total_bytes == 64 * 64 * 2
+        assert t.data_bytes == 64 * 64 * 2
+
+    def test_reuse_inflates_stream_not_data(self):
+        t = fig5_c()
+        assert t.total_bytes == 2 * t.data_bytes
+
+
+class TestTransformations:
+    def test_permute_loops_preserves_data_space(self):
+        t = row_major((8, 8), (4, 2))
+        p = t.permute_loops((1, 0))
+        assert p.data_shape == t.data_shape
+        assert list(p.stream_offsets()) == list(col_major((8, 8), (4, 2)).stream_offsets())
+
+    def test_vectorize(self):
+        t = row_major((64, 64), (16, 16))
+        v = t.vectorize((1, 2))
+        assert v.elem_shape == (16, 32)
+        assert v.num_tokens == t.num_tokens // 2
+        assert v.data_shape == t.data_shape
+
+    def test_canonicalize_drops_trip1_reuse(self):
+        t = itensor_from_tiling((8, 8), (4, 2), reuse=[(0, 1)])
+        c = t.canonicalize()
+        assert c.iter_rank == 2
+        assert c.equivalent(row_major((8, 8), (4, 2)))
+
+
+class TestBlockSpecExport:
+    def test_block_spec_roundtrip(self):
+        t = col_major((8, 8), (4, 2))
+        block_shape, index_map = t.block_spec_args()
+        assert block_shape == (4, 2)
+        # Grid coordinate (i0, i1) -> block coords, matching stream offsets.
+        grid = t.tripcounts
+        offs = []
+        for i0 in range(grid[0]):
+            for i1 in range(grid[1]):
+                b = index_map(i0, i1)
+                offs.append(tuple(bi * ei for bi, ei in zip(b, t.elem_shape)))
+        assert offs == list(t.stream_offsets())
+
+
+# ------------------------------------------------------------------ #
+# Property tests
+# ------------------------------------------------------------------ #
+
+@st.composite
+def tiled_itensor(draw, max_rank=3):
+    rank = draw(st.integers(1, max_rank))
+    tiles = [draw(st.sampled_from([1, 2, 4])) for _ in range(rank)]
+    grid = [draw(st.integers(1, 4)) for _ in range(rank)]
+    data = [t * g for t, g in zip(tiles, grid)]
+    order = draw(st.permutations(list(range(rank))))
+    dtype = draw(st.sampled_from(["float32", "bfloat16", "int8"]))
+    return itensor_from_tiling(data, tiles, loop_order=list(order), dtype=dtype)
+
+
+@given(tiled_itensor())
+@settings(max_examples=60, deadline=None)
+def test_stream_covers_every_tile_exactly_once(t):
+    """Invariant: an exact tiling without reuse emits each tile once."""
+    ids = list(t.stream_tile_ids())
+    assert sorted(ids) == list(range(t.num_tokens))
+
+
+@given(tiled_itensor())
+@settings(max_examples=60, deadline=None)
+def test_offsets_within_bounds_and_aligned(t):
+    for off in t.stream_offsets():
+        for o, e, d in zip(off, t.elem_shape, t.data_shape):
+            assert 0 <= o <= d - e
+            assert o % e == 0
+
+
+@given(tiled_itensor(), st.permutations([0, 1, 2]))
+@settings(max_examples=40, deadline=None)
+def test_loop_permutation_is_a_bijection_on_tiles(t, perm3):
+    perm = [p for p in perm3 if p < t.iter_rank]
+    if sorted(perm) != list(range(t.iter_rank)):
+        return
+    p = t.permute_loops(perm)
+    assert sorted(p.stream_tile_ids()) == sorted(t.stream_tile_ids())
+    assert p.data_shape == t.data_shape

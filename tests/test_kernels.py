@@ -1,0 +1,243 @@
+"""Per-kernel allclose tests: interpret-mode Pallas vs pure-jnp oracles.
+
+Every kernel sweeps shapes (aligned + ragged fallbacks) and dtypes per the
+brief; tolerances reflect bf16 inputs with f32 accumulation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.itensor import col_major, itensor_from_tiling, row_major
+from repro.kernels import (block_matmul, convert_layout, flash_attention,
+                           mamba2_ssd_pallas, moe_experts_pallas, ref,
+                           rmsnorm_matmul, streamed_ffn, streamed_mlp,
+                           streamed_xent_loss, streamed_xent_parts,
+                           wkv6_pallas)
+
+TOL = {jnp.float32: dict(atol=1e-5, rtol=1e-4),
+       jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 256, 96),
+                                   (96, 48, 160), (32, 512, 128)])
+def test_block_matmul(m, k, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = rand(ks[0], (m, k), dtype)
+    w = rand(ks[1], (k, n), dtype)
+    out = block_matmul(x, w, block_m=64, block_n=64, block_k=64)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,f", [(64, 64, 128), (128, 96, 256),
+                                   (32, 128, 96)])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_streamed_ffn(t, d, f, act, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = rand(ks[0], (t, d), dtype)
+    wg = rand(ks[1], (d, f), dtype, 0.1)
+    wu = rand(ks[2], (d, f), dtype, 0.1)
+    wd = rand(ks[3], (f, d), dtype, 0.1)
+    out = streamed_ffn(x, wg, wu, wd, activation=act, block_t=32,
+                       block_f=64)
+    want = ref.ffn_ref(x, wg, wu, wd, activation=act)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_streamed_mlp():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = rand(ks[0], (64, 96), jnp.float32)
+    wu = rand(ks[1], (96, 128), jnp.float32, 0.1)
+    wd = rand(ks[2], (128, 96), jnp.float32, 0.1)
+    out = streamed_mlp(x, wu, wd, activation="gelu", block_t=32, block_f=64)
+    want = ref.mlp_ref(x, wu, wd, activation="gelu")
+    np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,n", [(64, 128, 96), (96, 64, 192)])
+def test_rmsnorm_matmul(t, d, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = rand(ks[0], (t, d), dtype)
+    scale = rand(ks[1], (d,), jnp.float32, 0.1)
+    w = rand(ks[2], (d, n), dtype, 0.1)
+    out = rmsnorm_matmul(x, scale, w, block_t=32, block_n=48)
+    want = ref.rmsnorm_matmul_ref(x, scale, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa(hq, hkv, causal, dtype):
+    b, s, d = 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rand(ks[0], (b, s, hq, d), dtype)
+    k = rand(ks[1], (b, s, hkv, d), dtype)
+    v = rand(ks[2], (b, s, hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_kv=32)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_sliding_window(window):
+    b, s, h, d = 1, 128, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = rand(ks[0], (b, s, h, d), jnp.float32)
+    k = rand(ks[1], (b, s, h, d), jnp.float32)
+    v = rand(ks[2], (b, s, h, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_kv=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-4)
+
+
+def test_flash_attention_kv_len_mask():
+    b, s, h, d = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = rand(ks[0], (b, 1, h, d), jnp.float32)
+    k = rand(ks[1], (b, s, h, d), jnp.float32)
+    v = rand(ks[2], (b, s, h, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, kv_len=40,
+                          block_q=1, block_kv=16)
+    want = ref.attention_ref(q, k, v, causal=False, kv_len=40)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,vp,vocab", [(32, 64, 256, 200),
+                                          (64, 32, 512, 512)])
+def test_streamed_xent(t, d, vp, vocab, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    hidden = rand(ks[0], (t, d), dtype)
+    head = rand(ks[1], (d, vp), dtype, 0.1)
+    labels = jax.random.randint(ks[2], (t,), 0, vocab)
+    lse, gold = streamed_xent_parts(hidden, head, labels,
+                                    vocab_size=vocab, block_t=16,
+                                    block_v=64)
+    lse_r, gold_r = ref.xent_parts_ref(hidden, head, labels, vocab)
+    np.testing.assert_allclose(lse, lse_r, **TOL[dtype])
+    np.testing.assert_allclose(gold, gold_r, **TOL[dtype])
+    loss = streamed_xent_loss(hidden, head, labels, vocab_size=vocab,
+                              block_t=16, block_v=64)
+    loss_r = ref.xent_loss_ref(hidden, head, labels, vocab)
+    np.testing.assert_allclose(loss, loss_r, **TOL[dtype])
+
+
+def test_streamed_xent_ignore_index():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    hidden = rand(ks[0], (32, 64), jnp.float32)
+    head = rand(ks[1], (64, 128), jnp.float32, 0.1)
+    labels = jax.random.randint(ks[2], (32,), 0, 128)
+    labels = labels.at[:8].set(-100)
+    loss = streamed_xent_loss(hidden, head, labels, vocab_size=128,
+                              block_t=16, block_v=64)
+    loss_r = ref.xent_loss_ref(hidden, head, labels, 128)
+    np.testing.assert_allclose(loss, loss_r, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba2_ssd_kernel(chunk, dtype):
+    bsz, s, h, p, n = 2, 64, 3, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    x = rand(ks[0], (bsz, s, h, p), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (bsz, s, h), jnp.float32) - 1)
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    b = rand(ks[2], (bsz, s, n), dtype, 0.5)
+    c = rand(ks[3], (bsz, s, n), dtype, 0.5)
+    d_skip = jnp.ones((h,))
+    y, st = mamba2_ssd_pallas(x, dt, a_log, b, c, d_skip, chunk=chunk)
+    yr, str_ = ref.mamba2_ref(x, dt, a_log, b, c, d_skip)
+    tol = dict(atol=1e-4, rtol=1e-3) if dtype == jnp.float32 else \
+        dict(atol=1e-1, rtol=1e-1)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(st, str_, **tol)
+
+
+@pytest.mark.parametrize("chunk", [8, 32])
+def test_wkv6_kernel(chunk):
+    bsz, s, h, n = 2, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(10), 5)
+    r = rand(ks[0], (bsz, s, h, n), jnp.float32)
+    k = rand(ks[1], (bsz, s, h, n), jnp.float32, 0.3)
+    v = rand(ks[2], (bsz, s, h, n), jnp.float32)
+    w = jax.nn.sigmoid(rand(ks[3], (bsz, s, h, n), jnp.float32))
+    u = rand(ks[4], (h, n), jnp.float32, 0.1)
+    y, st = wkv6_pallas(r, k, v, w, u, chunk=chunk)
+    yr, str_ = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(st, str_, atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("e,topk", [(4, 2), (8, 8)])
+def test_moe_experts_kernel(e, topk):
+    t, d, f = 32, 48, 64
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    x = rand(ks[0], (t, d), jnp.float32)
+    wg = rand(ks[1], (e, d, f), jnp.float32, 0.1)
+    wu = rand(ks[2], (e, d, f), jnp.float32, 0.1)
+    wd = rand(ks[3], (e, f, d), jnp.float32, 0.1)
+    logits = rand(ks[4], (t, e), jnp.float32)
+    probs = jax.nn.softmax(logits)
+    thresh = jax.lax.top_k(probs, topk)[0][:, -1:]
+    gates = jnp.where(probs >= thresh, probs, 0.0)
+    gates = gates / gates.sum(-1, keepdims=True)
+    out = moe_experts_pallas(x, gates, wg, wu, wd, block_t=16)
+    want = ref.moe_experts_ref(x, gates, wg, wu, wd)
+    np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# Stream layout converter (Algorithm 1, executable)
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("pair", [
+    ((32, 32), (8, 8)),
+    ((64, 32), (16, 8)),
+])
+def test_convert_layout_row_to_col(pair):
+    data_shape, tile = pair
+    src = row_major(data_shape, tile)
+    dst = col_major(data_shape, tile)
+    data = jnp.arange(np.prod(data_shape), dtype=jnp.float32) \
+        .reshape(data_shape)
+    out = convert_layout(data, src, dst)
+    want = ref.convert_layout_ref(data, src, dst)
+    np.testing.assert_array_equal(out, want)
+
+
+def test_convert_layout_identity_fifo():
+    src = row_major((32, 32), (8, 8))
+    data = jnp.arange(1024, dtype=jnp.float32).reshape(32, 32)
+    out = convert_layout(data, src, src)
+    want = ref.convert_layout_ref(data, src, src)
+    np.testing.assert_array_equal(out, want)
+
+
+def test_convert_layout_partial_shared_prefix():
+    """Fig. 5 case: shared outer loop -> window smaller than the tensor."""
+    from repro.core.converter import infer_converter
+    src = itensor_from_tiling((32, 16), (4, 4), loop_order=(0, 1))
+    dst = itensor_from_tiling((32, 16), (4, 4), loop_order=(1, 0))
+    spec = infer_converter(src, dst)
+    assert spec is not None
+    data = jnp.arange(512, dtype=jnp.float32).reshape(32, 16)
+    out = convert_layout(data, src, dst)
+    want = ref.convert_layout_ref(data, src, dst)
+    np.testing.assert_array_equal(out, want)

@@ -1,0 +1,285 @@
+"""Layer-level numerical tests against naive references."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def full_attention_ref(q, k, v, causal=True, window=0, q_offset=0):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / math.sqrt(d)
+    qp = q_offset + jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = kp <= qp
+    if window:
+        mask = jnp.logical_and(mask, kp > qp - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("chunk", [16, 64, 128])
+def test_streaming_attention_matches_full(hq, hkv, chunk):
+    rng = jax.random.PRNGKey(0)
+    b, s, d = 2, 96, 16
+    q = jax.random.normal(rng, (b, s, hq, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    out = L.streaming_attention(q, k, v, causal=True, chunk_size=chunk)
+    ref = full_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("window", [8, 32])
+def test_local_attention_matches_windowed_full(window):
+    rng = jax.random.PRNGKey(3)
+    b, s, h, d = 1, 128, 2, 8
+    q = jax.random.normal(rng, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, h, d))
+    out = L.local_attention(q, k, v, window=window)
+    ref = full_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-4)
+
+
+def test_noncausal_attention():
+    rng = jax.random.PRNGKey(6)
+    b, s, h, d = 2, 64, 4, 8
+    q = jax.random.normal(rng, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(7), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(8), (b, s, h, d))
+    out = L.streaming_attention(q, k, v, causal=False, chunk_size=16)
+    ref = full_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-4)
+
+
+def test_decode_attention_matches_last_row():
+    rng = jax.random.PRNGKey(9)
+    b, s, hq, hkv, d = 2, 33, 4, 2, 8
+    q = jax.random.normal(rng, (b, 1, hq, d))
+    kc = jax.random.normal(jax.random.PRNGKey(10), (b, 64, hkv, d))
+    vc = jax.random.normal(jax.random.PRNGKey(11), (b, 64, hkv, d))
+    out = L.decode_attention(q, kc, vc, jnp.full((b,), s))
+    ref = full_attention_ref(q, kc[:, :s], vc[:, :s], causal=True,
+                             q_offset=s - 1)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-4)
+
+
+# ------------------------------------------------------------------ #
+# Mamba2 SSD vs sequential recurrence
+# ------------------------------------------------------------------ #
+
+def mamba_sequential_ref(x, dt, a_log, b, c, d_skip, init_state=None):
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log)
+    state = (init_state if init_state is not None
+             else jnp.zeros((bsz, h, p, n)))
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dt[:, t] * a)                       # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", x[:, t] * dt[:, t][..., None],
+                         b[:, t])
+        state = state * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, c[:, t])
+        ys.append(y + x[:, t] * d_skip[None, :, None])
+    return jnp.stack(ys, axis=1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mamba2_ssd_matches_sequential(chunk):
+    rng = jax.random.PRNGKey(0)
+    bsz, s, h, p, n = 2, 32, 3, 4, 8
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (bsz, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, h)) - 1)
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    b = jax.random.normal(ks[2], (bsz, s, n)) * 0.5
+    c = jax.random.normal(ks[3], (bsz, s, n)) * 0.5
+    d_skip = jnp.ones((h,))
+    y, st = L.mamba2_ssd(x, dt, a_log, b, c, d_skip, chunk=chunk)
+    yr, str_ = mamba_sequential_ref(x, dt, a_log, b, c, d_skip)
+    np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(st, str_, atol=1e-4, rtol=1e-3)
+
+
+def test_mamba2_decode_continues_prefill():
+    rng = jax.random.PRNGKey(1)
+    bsz, s, h, p, n = 1, 16, 2, 4, 8
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (bsz, s + 1, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s + 1, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    b = jax.random.normal(ks[2], (bsz, s + 1, n)) * 0.5
+    c = jax.random.normal(ks[3], (bsz, s + 1, n)) * 0.5
+    d_skip = jnp.zeros((h,))
+    y_ref, _ = mamba_sequential_ref(x, dt, a_log, b, c, d_skip)
+    _, st = L.mamba2_ssd(x[:, :s], dt[:, :s], a_log, b[:, :s], c[:, :s],
+                         d_skip, chunk=8)
+    y1, _ = L.mamba2_decode_step(x[:, s], dt[:, s], a_log, b[:, s], c[:, s],
+                                 d_skip, st)
+    np.testing.assert_allclose(y1, y_ref[:, s], atol=1e-4, rtol=1e-3)
+
+
+# ------------------------------------------------------------------ #
+# RWKV6 wkv
+# ------------------------------------------------------------------ #
+
+def wkv_ref(r, k, v, w, u):
+    bsz, s, h, n = r.shape
+    state = jnp.zeros((bsz, h, n, n))
+    ys = []
+    for t in range(s):
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        y = jnp.einsum("bhk,bhkv->bhv", r[:, t],
+                       state + u[None, :, :, None] * kv)
+        state = state * w[:, t][..., None] + kv
+        ys.append(y)
+    return jnp.stack(ys, 1), state
+
+
+def test_wkv6_matches_reference():
+    rng = jax.random.PRNGKey(2)
+    bsz, s, h, n = 2, 24, 2, 4
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (bsz, s, h, n))
+    k = jax.random.normal(ks[1], (bsz, s, h, n)) * 0.3
+    v = jax.random.normal(ks[2], (bsz, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bsz, s, h, n)))
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    y, st = L.wkv6(r, k, v, w, u)
+    yr, str_ = wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(y, yr, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(st, str_, atol=1e-5, rtol=1e-4)
+
+
+def test_wkv6_init_state_composes():
+    rng = jax.random.PRNGKey(3)
+    bsz, s, h, n = 1, 16, 2, 4
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (bsz, s, h, n))
+    k = jax.random.normal(ks[1], (bsz, s, h, n)) * 0.3
+    v = jax.random.normal(ks[2], (bsz, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bsz, s, h, n)))
+    u = jnp.zeros((h, n))
+    y_all, st_all = L.wkv6(r, k, v, w, u)
+    _, st_half = L.wkv6(r[:, :8], k[:, :8], v[:, :8], w[:, :8], u)
+    y2, st2 = L.wkv6(r[:, 8:], k[:, 8:], v[:, 8:], w[:, 8:], u,
+                     init_state=st_half)
+    np.testing.assert_allclose(y2, y_all[:, 8:], atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(st2, st_all, atol=1e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# RoPE / M-RoPE / conv / norms
+# ------------------------------------------------------------------ #
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative positions."""
+    rng = jax.random.PRNGKey(4)
+    d = 16
+    q = jax.random.normal(rng, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, d))
+
+    def score(pq, pk):
+        qr = L.apply_rope(q, jnp.array([[pq]]), 1e4)
+        kr = L.apply_rope(k, jnp.array([[pk]]), 1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(5, 3) - score(12, 10)) < 1e-4
+    assert abs(score(5, 3) - score(6, 3)) > 1e-5
+
+
+def test_mrope_equals_rope_for_text():
+    """With equal (t,h,w) position streams, M-RoPE == RoPE."""
+    rng = jax.random.PRNGKey(6)
+    b, s, h, d = 2, 8, 2, 16
+    x = jax.random.normal(rng, (b, s, h, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3 = jnp.broadcast_to(pos[None], (3, b, s))
+    np.testing.assert_allclose(L.apply_mrope(x, pos3, 1e4),
+                               L.apply_rope(x, pos, 1e4),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_causal_conv_matches_numpy():
+    rng = jax.random.PRNGKey(7)
+    b, s, d, k = 2, 10, 3, 4
+    x = jax.random.normal(rng, (b, s, d))
+    w = jax.random.normal(jax.random.PRNGKey(8), (k, d))
+    bias = jnp.zeros((d,))
+    y, tail = L.causal_conv1d(x, w, bias)
+    xp = np.concatenate([np.zeros((b, k - 1, d)), np.asarray(x)], axis=1)
+    ref = np.zeros((b, s, d))
+    for t in range(s):
+        ref[:, t] = sum(xp[:, t + i] * np.asarray(w)[i] for i in range(k))
+    np.testing.assert_allclose(y, jax.nn.silu(jnp.asarray(ref)),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(tail, x[:, s - (k - 1):], atol=1e-6)
+
+
+def test_rms_norm_unit_scale():
+    x = jnp.ones((2, 4, 8)) * 3.0
+    y = L.rms_norm(x, jnp.zeros((8,)))
+    np.testing.assert_allclose(y, jnp.ones_like(x), atol=1e-5)
+
+
+def test_wkv6_chunked_matches_sequential():
+    """§Perf rwkv6 hillclimb: chunk-parallel wkv6 == per-token recurrence
+    (under the shared decay clamp w >= e^-5)."""
+    rng = jax.random.PRNGKey(11)
+    bsz, s, h, n = 2, 64, 2, 8
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (bsz, s, h, n))
+    k = jax.random.normal(ks[1], (bsz, s, h, n)) * 0.3
+    v = jax.random.normal(ks[2], (bsz, s, h, n))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (bsz, s, h, n))))
+    w = jnp.clip(w, np.exp(-5.0), 1.0)
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    y1, st1 = L.wkv6(r, k, v, w, u)
+    y2, st2 = L.wkv6_chunked(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(y1, y2, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(st1, st2, atol=2e-4, rtol=1e-3)
+
+
+def test_wkv6_chunked_ragged_chunk_fallback():
+    rng = jax.random.PRNGKey(12)
+    bsz, s, h, n = 1, 24, 1, 4   # 24 % 16 != 0 -> gcd fallback
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (bsz, s, h, n))
+    k = jax.random.normal(ks[1], (bsz, s, h, n)) * 0.3
+    v = jax.random.normal(ks[2], (bsz, s, h, n))
+    w = jnp.clip(jax.nn.sigmoid(jax.random.normal(ks[3], (bsz, s, h, n))),
+                 np.exp(-5.0), 1.0)
+    u = jnp.zeros((h, n))
+    y1, st1 = L.wkv6(r, k, v, w, u)
+    y2, st2 = L.wkv6_chunked(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(y1, y2, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(st1, st2, atol=2e-4, rtol=1e-3)
+
+
+def test_streaming_attention_remat_chunk_same_result():
+    rng = jax.random.PRNGKey(13)
+    b, s, hq, d = 1, 64, 2, 16
+    q = jax.random.normal(rng, (b, s, hq, d))
+    k = jax.random.normal(jax.random.PRNGKey(14), (b, s, hq, d))
+    v = jax.random.normal(jax.random.PRNGKey(15), (b, s, hq, d))
+    a = L.streaming_attention(q, k, v, chunk_size=16, remat_chunk=False)
+    bb = L.streaming_attention(q, k, v, chunk_size=16, remat_chunk=True)
+    np.testing.assert_allclose(a, bb, atol=1e-6)
+    # And gradients flow through the rematted path.
+    g = jax.grad(lambda qq: L.streaming_attention(
+        qq, k, v, chunk_size=16, remat_chunk=True).sum())(q)
+    assert bool(jnp.isfinite(g).all())

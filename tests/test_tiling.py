@@ -1,0 +1,131 @@
+"""Tiling space tests: itensor derivation, unroll balancing, vectorization."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.platforms import TPU_V5E, U55C
+from repro.core.tiling import (PARALLEL, REDUCTION, LinalgOpSpec, LoopDim,
+                               OperandSpec, TilingDecision, TilingSpace,
+                               default_decision, largest_divisor_leq, tile_op)
+
+
+def matmul_spec(name="mm", t=64, n=32, k=128, tensor_in="x", tensor_out="y"):
+    return LinalgOpSpec(
+        name=name, op="matmul",
+        loops=(LoopDim("t", t), LoopDim("n", n),
+               LoopDim("k", k, REDUCTION)),
+        inputs=(OperandSpec(tensor_in, ("t", "k")),
+                OperandSpec("w_" + name, ("k", "n"), is_weight=True)),
+        output=OperandSpec(tensor_out, ("t", "n")),
+        flops_per_point=2.0)
+
+
+def test_largest_divisor():
+    assert largest_divisor_leq(64, 16) == 16
+    assert largest_divisor_leq(48, 32) == 24
+    assert largest_divisor_leq(7, 4) == 1
+    assert largest_divisor_leq(10, 100) == 10
+
+
+def test_default_decision_reduction_innermost():
+    op = matmul_spec()
+    d = default_decision(op, 16)
+    assert d.loop_order == ("t", "n", "k")   # parallel outer, reduction inner
+    assert all(op.loop(n).extent % s == 0 for n, s in d.tile_sizes.items())
+
+
+def test_tile_op_itensor_shapes():
+    op = matmul_spec(t=64, n=32, k=128)
+    dec = default_decision(op, 16)
+    tk = tile_op(op, dec)
+    # Output streams one (16,16) tile per (t,n) tile pair; k collapsed.
+    assert tk.out_type.elem_shape == (16, 16)
+    assert tk.out_type.data_shape == (64, 32)
+    assert tk.out_type.num_tokens == (64 // 16) * (32 // 16)
+    # Input x[t,k]: iterated over (t,n,k) loop nest -> n is a reuse dim.
+    x = tk.in_types[0]
+    assert x.data_shape == (64, 128)
+    assert x.reuse_factor == 32 // 16        # re-streamed once per n tile
+    # Weight bytes: full weight tensor.
+    assert tk.weight_bytes == 128 * 32 * 2
+
+
+def test_reduction_dim_not_in_output():
+    op = matmul_spec()
+    dec = default_decision(op, 16)
+    tk = tile_op(op, dec)
+    # Out itensor's iteration space excludes the reduction loop entirely.
+    assert tk.out_type.num_tokens == math.prod(tk.out_type.grid_shape)
+
+
+def test_intensity_aware_unroll_targets_longest():
+    # Two matmuls; the second has 8x the work -> should get more unroll.
+    big = matmul_spec("big", t=64, n=64, k=512, tensor_in="a", tensor_out="b")
+    small = matmul_spec("small", t=64, n=64, k=64, tensor_in="b",
+                        tensor_out="c")
+    space = TilingSpace(ops=[big, small], default_tile_size=32,
+                        overall_unroll_size=32)
+    dec = space.decide(U55C)
+    assert dec["big"].unroll >= dec["small"].unroll
+    assert dec["big"].unroll > 1
+
+
+def test_build_graph_connects_chain():
+    a = matmul_spec("a", tensor_in="x", tensor_out="t1")
+    b = matmul_spec("b", t=64, n=16, k=32, tensor_in="t1", tensor_out="t2")
+    space = TilingSpace(ops=[a, b], default_tile_size=16)
+    g = space.build_graph(TPU_V5E)
+    assert g.num_kernels == 2
+    assert g.successors("a") == ["b"]
+    # Edge data spaces line up even though tile decisions may differ.
+    for u, v, k, data in g.edges():
+        assert data["src_type"].data_shape == data["dst_type"].data_shape
+
+
+def test_vectorization_widens_edge_tokens():
+    a = matmul_spec("a", t=512, n=512, k=2048, tensor_in="x",
+                    tensor_out="t1")
+    b = matmul_spec("b", t=512, n=512, k=512, tensor_in="t1",
+                    tensor_out="t2")
+    space = TilingSpace(ops=[a, b], default_tile_size=16,
+                        overall_unroll_size=128)
+    decisions = space.decide(TPU_V5E)
+    g = space.build_graph(TPU_V5E, decisions)
+    (u, v, k, data), = list(g.edges())
+    f = min(decisions["a"].vector_factor, decisions["b"].vector_factor)
+    if f > 1:
+        assert data["src_type"].elem_shape[-1] == 16 * f
+
+
+@given(t=st.sampled_from([32, 64, 96]), n=st.sampled_from([32, 48, 64]),
+       k=st.sampled_from([64, 128]), tile=st.sampled_from([8, 16, 24, 32]))
+@settings(max_examples=40, deadline=None)
+def test_tiling_stream_covers_tensor(t, n, k, tile):
+    """Property: output stream tiles cover the full tensor exactly once."""
+    op = matmul_spec(t=t, n=n, k=k)
+    dec = default_decision(op, tile)
+    tk = tile_op(op, dec)
+    seen = set()
+    for off in tk.out_type.stream_offsets():
+        assert off not in seen
+        seen.add(off)
+    grid = tk.out_type.grid_shape
+    assert len(seen) == math.prod(grid)
+
+
+@given(tile=st.sampled_from([8, 16, 32, 64]),
+       unroll=st.sampled_from([8, 32, 128]))
+@settings(max_examples=20, deadline=None)
+def test_decide_is_deterministic(tile, unroll):
+    ops = [matmul_spec("a", tensor_in="x", tensor_out="t1"),
+           matmul_spec("b", tensor_in="t1", tensor_out="t2")]
+    s1 = TilingSpace(ops=ops, default_tile_size=tile,
+                     overall_unroll_size=unroll)
+    s2 = TilingSpace(ops=ops, default_tile_size=tile,
+                     overall_unroll_size=unroll)
+    d1, d2 = s1.decide(U55C), s2.decide(U55C)
+    assert {k: (v.tile_sizes, v.unroll) for k, v in d1.items()} == \
+           {k: (v.tile_sizes, v.unroll) for k, v in d2.items()}

@@ -1,0 +1,100 @@
+"""Trace + DSE + lowering integration tests over all assigned archs."""
+
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED_ARCHS, get_config
+from repro.core.dse import evaluate_trial, explore
+from repro.core.lowering import compile_model, lower_groups
+from repro.core.platforms import TPU_V5E, U55C
+from repro.core.trace import block_flops, trace_block, trace_lm_head
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_trace_block_builds_valid_graph(arch):
+    cfg = get_config(arch)
+    ops = trace_block(cfg, tokens=128)
+    r = evaluate_trial(ops, TPU_V5E, 32, 32, keep_artifacts=True)
+    assert r.graph is not None
+    r.graph.validate()
+    assert r.graph.num_kernels == len(ops)
+    # Stream graph must be connected from x_in to x_out through >= 3 kernels.
+    assert r.graph.g.number_of_edges() >= len(ops) - 4
+
+
+@pytest.mark.parametrize("arch", ["zamba2-2.7b", "gemma3-4b"])
+def test_pattern_layers_differ(arch):
+    cfg = get_config(arch)
+    kinds = {cfg.layer_kind(i) for i in range(cfg.num_layers)}
+    assert len(kinds) == 2   # hybrid / local:global patterns present
+    per = cfg.shared_attn_every or cfg.global_attn_every
+    o_plain = trace_block(cfg, tokens=64, layer_index=0)
+    o_special = trace_block(cfg, tokens=64, layer_index=per - 1)
+    assert len(o_special) != len(o_plain) or arch == "gemma3-4b"
+
+
+def test_decode_trace_uses_kv_len():
+    cfg = get_config("llama3-8b")
+    ops = trace_block(cfg, tokens=4, kv_len=1024)
+    att = [o for o in ops if o.op == "attention"][0]
+    assert att.loop("s").extent == 1024
+    # Decode K/V comes from the HBM cache -> not stream-wired.
+    ids = {o.output.tensor_id for o in ops}
+    assert att.inputs[1].tensor_id not in ids
+
+
+def test_flops_scale_with_tokens():
+    cfg = get_config("qwen3-0.6b")
+    f1 = block_flops(cfg, 128)
+    f2 = block_flops(cfg, 256)
+    assert 1.9 < f2 / f1 < 4.2   # attention term is quadratic in tokens
+
+
+def test_moe_flops_active_only():
+    cfg = get_config("granite-moe-1b-a400m")
+    ops = trace_block(cfg, tokens=64)
+    experts = [o for o in ops if o.op == "moe_experts"][0]
+    d, f = cfg.d_model, cfg.d_ff
+    glu = 3 if cfg.gated_ffn else 2
+    expect = 64 * cfg.top_k * glu * d * f * 2.0
+    assert abs(experts.work_flops - expect) / expect < 1e-6
+
+
+def test_lm_head_streams_vocab():
+    cfg = get_config("gemma3-4b")
+    ops = trace_lm_head(cfg, tokens=32)
+    head = ops[-1]
+    assert head.loop("v").extent == cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED_ARCHS))
+def test_compile_model_all_archs(arch):
+    cfg = get_config(arch)
+    c = compile_model(cfg, tokens=128, default_tile_size=32,
+                      overall_unroll_size=64)
+    assert c.fusion.num_groups >= 1
+    assert c.trial.feasible
+    # Every kernel belongs to exactly one lowered group.
+    covered = [k for g in c.lowered for k in g.kernels]
+    assert sorted(covered) == sorted(n for n in c.graph.g.nodes)
+    # Stage timing was recorded for the Fig. 10c study.
+    assert set(c.stage_seconds) >= {"trace", "partition", "lowering"}
+
+
+def test_compile_memory_reduction_in_paper_band():
+    """Fig. 10a: fusion cuts on-chip intermediate memory to a small fraction
+    of the unfused design (paper: 14.8%-16.8% for its four LLMs; we assert
+    the order of magnitude on our U55C model of GPT-2)."""
+    c = compile_model(get_config("gpt2"), tokens=256, platform=U55C,
+                      dse_budget=8)
+    assert c.memory_report["ratio"] < 0.5
+    assert c.memory_report["after_bytes"] < c.memory_report["before_bytes"]
+
+
+def test_dse_explores_and_improves():
+    cfg = get_config("qwen1.5-0.5b")
+    ops = trace_block(cfg, tokens=256)
+    res = explore(ops, U55C, budget=10, seed=1)
+    assert res.num_trials >= 5
+    scores = [t.score for t in res.trials]
+    assert res.best.score <= min(scores) + 1e-12
+    assert res.best.graph is not None   # artifacts kept for lowering
