@@ -1,0 +1,141 @@
+"""Eager vs StreamPlan-fused execution benchmark -> BENCH_fused.json.
+
+Measures the three model entry points under both execution paths:
+
+  * ``forward_train`` — streamed-CE loss latency (tokens/s),
+  * ``prefill``       — prompt ingestion latency,
+  * decode            — engine tokens/s through the block-decode fast path
+    (``decode_block`` ticks per jitted dispatch, donated slot cache).
+
+Run on CPU the Pallas kernels execute in *interpret mode* (the kernel body
+runs in Python per grid step), so fused numbers here validate the dispatch
+plumbing and measure the perf *trajectory*, not the TPU speedup — on TPU
+the same plan dispatches compiled MXU kernels.  The JSON records backend
+and interpret mode so downstream dashboards can bucket the numbers.
+
+    PYTHONPATH=src python benchmarks/fused_vs_eager.py [--quick] \
+        [--out BENCH_fused.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels.common import interpret_default
+from repro.models import forward_train, init_params, prefill, resolve_plan
+from repro.serving import ServingEngine
+
+ARCHS = ("gpt2", "llama3-8b")        # layernorm/GELU-MLP and RMSNorm/SwiGLU-GQA
+
+
+def _timed(fn: Callable[[], Any], iters: int) -> float:
+    """Median wall-clock seconds over ``iters`` runs (post-warmup)."""
+    jax.block_until_ready(fn())                  # compile + warm caches
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
+    batch, seq = (2, 64) if quick else (2, 128)
+    iters = 3 if quick else 7
+    new_tokens = 16 if quick else 32
+    decode_block = 8
+    max_len = seq + new_tokens + decode_block
+
+    base = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, base)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0,
+                              base.vocab_size)
+    train_batch = {"tokens": toks, "labels": toks}
+    prompts = [np.asarray(toks[i]) for i in range(batch)]
+
+    result: Dict[str, Any] = {
+        "arch": base.name, "batch": batch, "seq": seq,
+        "new_tokens": new_tokens, "decode_block": decode_block,
+    }
+    plan = resolve_plan(dataclasses.replace(base, use_fused_kernels=True),
+                        batch * seq)
+    result["plan"] = plan.summary()
+
+    losses = {}
+    for mode in ("eager", "fused"):
+        cfg = dataclasses.replace(base, use_fused_kernels=(mode == "fused"))
+        train_fn = jax.jit(lambda p, b: forward_train(p, cfg, b))
+        prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b))
+
+        train_s = _timed(lambda: train_fn(params, train_batch), iters)
+        prefill_s = _timed(lambda: prefill_fn(params, train_batch)[0], iters)
+        losses[mode] = float(train_fn(params, train_batch))
+
+        engine = ServingEngine(cfg, params, batch_slots=batch,
+                               max_len=max_len, decode_block=decode_block)
+        engine.generate(prompts, max_new_tokens=2)   # compile prefill+decode
+        t0 = time.perf_counter()
+        reqs = engine.generate(prompts, max_new_tokens=new_tokens)
+        decode_s = time.perf_counter() - t0
+        generated = sum(len(r.out_tokens) for r in reqs)
+        result[mode] = {
+            "train_s": train_s,
+            "train_tokens_per_s": batch * seq / train_s,
+            "prefill_s": prefill_s,
+            "prefill_tokens_per_s": batch * seq / prefill_s,
+            "decode_s": decode_s,
+            "decode_tokens_per_s": generated / decode_s,
+            "ttft_s": float(np.mean([r.ttft_s for r in reqs])),
+            "decode_dispatches": engine.metrics["dispatches"],
+        }
+    result["loss_abs_diff"] = abs(losses["eager"] - losses["fused"])
+    result["fused_over_eager_train"] = (result["fused"]["train_s"]
+                                        / result["eager"]["train_s"])
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: smaller shapes, fewer iterations")
+    ap.add_argument("--out", default="BENCH_fused.json")
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    args = ap.parse_args(argv)
+
+    report: Dict[str, Any] = {
+        "backend": jax.default_backend(),
+        "pallas_interpret": interpret_default(),
+        "quick": args.quick,
+        "configs": [],
+    }
+    for arch in args.archs.split(","):
+        t0 = time.perf_counter()
+        r = bench_config(arch, quick=args.quick)
+        r["bench_seconds"] = time.perf_counter() - t0
+        report["configs"].append(r)
+        e, f = r["eager"], r["fused"]
+        print(f"{r['arch']}: train {e['train_s']*1e3:.1f}ms eager / "
+              f"{f['train_s']*1e3:.1f}ms fused | decode "
+              f"{e['decode_tokens_per_s']:.1f} vs "
+              f"{f['decode_tokens_per_s']:.1f} tok/s | "
+              f"loss diff {r['loss_abs_diff']:.2e}", flush=True)
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

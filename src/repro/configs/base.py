@@ -63,6 +63,11 @@ class ModelConfig:
     # --- §Perf knobs (EXPERIMENTS.md; 0/False = paper-faithful baseline) ---
     rwkv_chunk: int = 0           # chunked wkv6 (state traffic / chunk)
     remat_attn_chunk: bool = False  # remat per KV chunk inside attention
+    # StreamPlan fused execution: the model entry points resolve a
+    # ``core.stream_plan.StreamPlan`` (trace -> tiling DSE -> fusion ->
+    # lowering) and dispatch blocks to the fused Pallas kernels it selected
+    # instead of the eager jnp path.
+    use_fused_kernels: bool = False
     kv_cache_layout: str = "bshd"   # "bhsd" = attention-native (no per-token
     #                                 full-cache transpose at decode)
     # Modality frontend stub (VLM patch / audio frame embeddings).

@@ -17,6 +17,8 @@ from .fusion import FusionPlan, explore_fusion, fusion_memory_report
 from .graph import DataflowGraph, KernelNode, KernelTiming
 from .itensor import (ITensorType, col_major, fig5_b, fig5_c,
                       itensor_from_tiling, row_major)
+from .stream_plan import (KernelChoice, LayerPlan, StreamPlan,
+                          build_stream_plan, plan_for)
 from .token_model import (EqualizationStrategy, max_tokens_exact,
                           max_tokens_paper, simulate_fifo_occupancy)
 
@@ -37,4 +39,6 @@ __all__ = [
     "LinalgOpSpec", "LoopDim", "OperandSpec", "TiledKernel",
     "TilingDecision", "TilingSpace", "tile_op",
     "block_flops", "trace_block", "trace_lm_head",
+    "KernelChoice", "LayerPlan", "StreamPlan", "build_stream_plan",
+    "plan_for",
 ]

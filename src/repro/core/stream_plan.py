@@ -1,0 +1,312 @@
+"""StreamPlan — the compiler-to-runtime bridge (DSE decisions drive execution).
+
+Everything upstream of this module is *analysis*: ``trace.py`` turns a
+``ModelConfig`` block into structured ops, ``tiling.py``/``dse.py`` explore
+tile sizes and unroll with fusion feedback, ``fusion.py`` groups kernels
+under the on-chip budget, and ``lowering.py`` names a Pallas implementation
+per fusion group.  A ``StreamPlan`` closes the loop: it runs that pipeline
+and emits, per layer *kind* (attn / local_attn / mamba / rwkv / ...), the
+concrete kernel choice and block sizes the executable model should use —
+``models/model.py`` consults the plan at trace time and dispatches to the
+fused Pallas kernels instead of the eager jnp path.
+
+Stage mapping (DESIGN.md §StreamPlan):
+
+  * ``qkv``       — ln1 + Q/K/V projections.  Fused (``rmsnorm_matmul``)
+    when the fusion pass put ``ln1`` and ``q_proj`` in the same group and
+    the norm is RMSNorm; plain ``block_matmul`` when only the projections
+    fused; eager otherwise.
+  * ``attention`` — the composite attention op.  ``flash_attention`` when
+    its group lowered to a Pallas-backed pattern (full-sequence only; the
+    single-token decode attention stays on the XLA path — its grid would be
+    degenerate at Sq=1).
+  * ``ffn``       — ln2 + MLP.  ``streamed_ffn`` (gated) / ``streamed_mlp``
+    (ungated) / ``moe_experts``; the norm is folded into the kernel when
+    fusion grouped it with the projections and the norm is RMSNorm.
+  * ``mixer``     — the composite sequence mixer (``mamba2_scan`` /
+    ``rwkv6_wkv``) for SSM families.
+  * ``lm_head``   — final norm + LM head + loss.  ``streamed_xent`` streams
+    vocab tiles through an online logsumexp so [T, V] logits never exist;
+    chosen for training (the loss consumer is invisible to the block-level
+    trace, so the choice is made here, not in the pattern registry).
+
+Block sizes: the DSE's ``default_tile_size`` lattice is sized for the
+paper's FPGA fabric (16..256); TPU Pallas kernels want MXU/lane-aligned
+tiles, so plan blocks are ``max(dse_tile, 128)`` used as *targets* — every
+kernel wrapper clips to the largest aligned divisor of the actual extent
+(``kernels/common.pick_block``), which also keeps smoke-sized shapes legal.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from .dse import evaluate_trial
+from .graph import DataflowGraph
+from .lowering import CompiledDataflow, compile_model, lower_groups
+from .partition import partition
+from .platforms import Platform, TPU_V5E
+from .trace import trace_lm_head
+
+LANE = 128      # TPU vreg lane width: Pallas block-size floor
+
+Blocks = Tuple[Tuple[str, int], ...]
+
+
+@dataclass(frozen=True)
+class KernelChoice:
+    """One stage's implementation + Pallas block-size targets."""
+    implementation: str          # kernel name in repro.kernels, or "eager"
+    blocks: Blocks = ()
+
+    @property
+    def fused(self) -> bool:
+        return self.implementation != "eager"
+
+    @property
+    def kw(self) -> Dict[str, int]:
+        """Block sizes as kwargs for the kernel wrapper."""
+        return dict(self.blocks)
+
+
+EAGER = KernelChoice("eager")
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """Kernel choices for one layer kind."""
+    kind: str
+    qkv: KernelChoice = EAGER        # ln1 + Q/K/V projections
+    attention: KernelChoice = EAGER  # full-sequence attention
+    ffn: KernelChoice = EAGER        # ln2 + MLP / MoE
+    mixer: KernelChoice = EAGER      # ssm_scan / wkv composite
+
+    @property
+    def any_fused(self) -> bool:
+        return any(c.fused for c in
+                   (self.qkv, self.attention, self.ffn, self.mixer))
+
+
+@dataclass(frozen=True)
+class StreamPlan:
+    """Concrete per-layer kernel choices for one (config, shape) pair."""
+    arch: str
+    tokens: int
+    kv_len: int
+    platform: str
+    default_tile_size: int
+    overall_unroll_size: int
+    layers: Tuple[Tuple[str, LayerPlan], ...]   # kind -> plan
+    lm_head: KernelChoice = EAGER
+    modeled_latency_s: float = 0.0
+    fusion_groups: int = 0
+    implementations: Tuple[str, ...] = ()
+
+    def layer(self, kind: str) -> LayerPlan:
+        for k, lp in self.layers:
+            if k == kind:
+                return lp
+        return LayerPlan(kind=kind)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch,
+            "tokens": self.tokens,
+            "kv_len": self.kv_len,
+            "tile": self.default_tile_size,
+            "unroll": self.overall_unroll_size,
+            "fusion_groups": self.fusion_groups,
+            "modeled_latency_s": self.modeled_latency_s,
+            "stages": {
+                kind: {"qkv": lp.qkv.implementation,
+                       "attention": lp.attention.implementation,
+                       "ffn": lp.ffn.implementation,
+                       "mixer": lp.mixer.implementation}
+                for kind, lp in self.layers
+            },
+            "lm_head": self.lm_head.implementation,
+        }
+
+
+# --------------------------------------------------------------------- #
+# Builder
+# --------------------------------------------------------------------- #
+
+def _pallas_block(tile: int) -> int:
+    """DSE tile -> Pallas block-size target (lane-aligned floor)."""
+    return max(int(tile), LANE)
+
+
+def _tile(graph: DataflowGraph, kernel: str, dim: str,
+          default: int = LANE) -> int:
+    try:
+        dec = graph.kernel(kernel).tags["decision"]
+    except KeyError:
+        return default
+    return _pallas_block(dec.tile_sizes.get(dim, default))
+
+
+def _group_impl(compiled: CompiledDataflow, kernel: str) -> str:
+    """Implementation chosen for the fusion group containing ``kernel``;
+    "xla_fusion" when unfused or the kernel is absent from the graph."""
+    for g in compiled.lowered:
+        if kernel in g.kernels:
+            return g.implementation
+    return "xla_fusion"
+
+
+def _same_group(compiled: CompiledDataflow, a: str, b: str) -> bool:
+    for g in compiled.lowered:
+        if a in g.kernels:
+            return b in g.kernels
+    return False
+
+
+def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
+                base: str) -> LayerPlan:
+    """Map one compiled block graph onto stage-level kernel choices.
+
+    A stage goes fused only when the fusion pass put its anchor kernel in a
+    group that lowered to a Pallas-backed pattern (not ``xla_fusion``) —
+    i.e. the compiler, not the runtime, decides what streams.
+    """
+    g = compiled.trial.graph
+    assert g is not None
+
+    def fused_at(anchor: str) -> bool:
+        return _group_impl(compiled, anchor) != "xla_fusion"
+
+    qkv = attention = ffn = mixer = EAGER
+
+    if kind in ("attn", "local_attn", "global_attn", "mamba+shared_attn"):
+        ab = f"{base}.shared" if kind == "mamba+shared_attn" else base
+        if fused_at(f"{ab}.q_proj"):
+            # The shared-attn block's pre-attention norm is traced as
+            # "<base>.shared.ln"; regular attention blocks use "<base>.ln1".
+            ln = f"{ab}.ln" if kind == "mamba+shared_attn" else f"{ab}.ln1"
+            norm_fused = (cfg.norm == "rmsnorm"
+                          and _same_group(compiled, ln, f"{ab}.q_proj"))
+            impl = "rmsnorm_matmul" if norm_fused else "block_matmul"
+            qkv = KernelChoice(impl, (
+                ("block_t", _tile(g, f"{ab}.q_proj", "t")),
+                ("block_n", _tile(g, f"{ab}.q_proj", "dq")),
+            ))
+        if fused_at(f"{ab}.attention"):
+            attention = KernelChoice("flash_attention", (
+                ("block_q", _tile(g, f"{ab}.attention", "t")),
+                ("block_kv", _tile(g, f"{ab}.attention", "s")),
+            ))
+        mb = f"{ab}.moe" if cfg.is_moe else f"{ab}.mlp"
+        if cfg.is_moe and cfg.gated_ffn and fused_at(f"{mb}.experts"):
+            ffn = KernelChoice("moe_experts", (
+                ("block_t", _tile(g, f"{mb}.experts", "t")),
+            ))
+        elif not cfg.is_moe and fused_at(f"{mb}.up_proj"):
+            norm_fused = (cfg.norm == "rmsnorm" and _same_group(
+                compiled, f"{ab}.ln2", f"{mb}.up_proj"))
+            impl = "streamed_ffn" if cfg.gated_ffn else "streamed_mlp"
+            ffn = KernelChoice(impl, (
+                ("block_t", _tile(g, f"{mb}.up_proj", "t")),
+                ("block_f", _tile(g, f"{mb}.up_proj", "f")),
+                ("fuse_norm", int(norm_fused)),
+            ))
+
+    if kind in ("mamba", "mamba+shared_attn"):
+        if fused_at(f"{base}.ssm_scan"):
+            mixer = KernelChoice("mamba2_scan", (
+                ("chunk", _tile(g, f"{base}.ssm_scan", "t")),
+            ))
+
+    if kind == "rwkv":
+        if fused_at(f"{base}.wkv"):
+            mixer = KernelChoice("rwkv6_wkv", (
+                ("chunk", min(64, _tile(g, f"{base}.wkv", "t"))),
+            ))
+
+    return LayerPlan(kind=kind, qkv=qkv, attention=attention, ffn=ffn,
+                     mixer=mixer)
+
+
+def build_stream_plan(cfg: ModelConfig, *, tokens: int,
+                      kv_len: Optional[int] = None,
+                      platform: Platform = TPU_V5E,
+                      dse_budget: int = 8) -> StreamPlan:
+    """Run the StreamTensor pipeline over every distinct layer kind of
+    ``cfg`` and collapse the result into an executable plan.
+
+    The DSE explores the tiling space once, on the first layer kind (the
+    paper's hyperparameters are global); remaining kinds and the LM head
+    are compiled as single trials with the winning parameters.
+    """
+    kinds: Dict[str, int] = {}
+    for i in range(cfg.num_layers):
+        kinds.setdefault(cfg.layer_kind(i), i)
+
+    layers = []
+    first = True
+    tile, unroll = None, None
+    latency = 0.0
+    groups = 0
+    impls: Tuple[str, ...] = ()
+    for kind, idx in kinds.items():
+        compiled = compile_model(
+            cfg, tokens=tokens, kv_len=kv_len, platform=platform,
+            layer_index=idx,
+            dse_budget=dse_budget if first else 1,
+            default_tile_size=None if first else tile,
+            overall_unroll_size=None if first else unroll)
+        if first:
+            tile = compiled.trial.params["default_tile_size"]
+            unroll = compiled.trial.params["overall_unroll_size"]
+            first = False
+        latency += compiled.trial.latency_s
+        groups += compiled.fusion.num_groups
+        impls += tuple(lg.implementation for lg in compiled.lowered)
+        layers.append((kind, _layer_plan(cfg, compiled, kind,
+                                         base=f"L{idx}")))
+
+    # LM head: norm + head matmul + loss.  The loss consumer is not part of
+    # the block trace, so the streamed-xent choice is made here; block sizes
+    # come from the head matmul's tiling decision.
+    head_trial = evaluate_trial(trace_lm_head(cfg, tokens), platform,
+                                tile or LANE, unroll or 64,
+                                keep_artifacts=True)
+    assert head_trial.graph is not None and head_trial.fusion is not None
+    head_lowered = lower_groups(head_trial.graph, head_trial.fusion,
+                                partition(head_trial.graph, 1))
+    head_fused = any(lg.implementation != "xla_fusion"
+                     for lg in head_lowered
+                     if "final.lm_head" in lg.kernels)
+    lm_head = EAGER
+    if head_fused:
+        lm_head = KernelChoice("streamed_xent", (
+            ("block_t", _tile(head_trial.graph, "final.lm_head", "t")),
+            ("block_v", max(_tile(head_trial.graph, "final.lm_head", "v"),
+                            512)),
+        ))
+    latency += head_trial.latency_s
+    groups += head_trial.fusion.num_groups
+    impls += tuple(lg.implementation for lg in head_lowered)
+
+    return StreamPlan(
+        arch=cfg.name, tokens=tokens, kv_len=kv_len or tokens,
+        platform=platform.name,
+        default_tile_size=tile or LANE, overall_unroll_size=unroll or 64,
+        layers=tuple(layers), lm_head=lm_head,
+        modeled_latency_s=latency, fusion_groups=groups,
+        implementations=impls)
+
+
+@functools.lru_cache(maxsize=64)
+def plan_for(cfg: ModelConfig, tokens: int,
+             kv_len: Optional[int] = None) -> StreamPlan:
+    """Cached plan lookup used by the model entry points.
+
+    Keyed on the (hashable, frozen) config plus the flattened token count
+    and KV length — the jitted callers re-trace per shape anyway, so plan
+    granularity matches jit granularity.
+    """
+    return build_stream_plan(cfg, tokens=tokens, kv_len=kv_len)

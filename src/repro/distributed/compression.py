@@ -18,8 +18,22 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:                                    # jax >= 0.6 top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                     # older jax: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    """Version-tolerant shard_map: replication checking is named
+    ``check_vma`` on new jax and ``check_rep`` before the rename."""
+    try:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
 
 Tree = Any
 
@@ -66,7 +80,6 @@ def make_compressed_allreduce(mesh: Mesh, axis: str = "data"):
             body, mesh=mesh,
             in_specs=(P(*[None] * g.ndim), P(*[None] * g.ndim)),
             out_specs=(P(*[None] * g.ndim), P(*[None] * g.ndim)),
-            check_vma=False,
         )(g, e)
 
     def reduce_tree(grads: Tree, errors: Optional[Tree] = None

@@ -8,6 +8,13 @@ the [bt, d_model] output in a VMEM scratch — producer (gate/up matmuls) and
 consumer (down matmul) are *stream-fused* exactly as the paper fuses Kernel0
 into Kernel1 through an on-chip buffer instead of external memory.
 
+With ``norm_scale`` the pre-FFN RMSNorm is folded in as well (the StreamPlan
+path when the fusion pass grouped ln2 with the projections): each x tile is
+normalized in VMEM right before hitting the MXU, so the normalized
+activation never round-trips HBM either.  The norm is recomputed per f-step
+on the resident x tile — pure VPU work traded for an HBM stream, the same
+trade ``rmsnorm_matmul`` makes.
+
 The itensor view: the intermediate's type is
     itensor<bt x bf, [T/bt, F/bf] * [bt, bf], (d0,d1)->(d0,d1)>
 for both producer and consumer — types match, so fusion needs no layout
@@ -34,13 +41,28 @@ def _act(kind: str, x):
     return jax.nn.gelu(x, approximate=True)
 
 
-def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
-                n_f: int, activation: str):
+def _rms_tile(x, scale_ref, eps: float):
+    """RMS-normalize one [bt, D] tile in VMEM (matches layers.rms_norm)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + scale_ref[...].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def _ffn_kernel(*refs, n_f: int, activation: str, norm_eps: Optional[float]):
+    if norm_eps is not None:
+        x_ref, scale_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref = refs
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]
+    if norm_eps is not None:
+        x = _rms_tile(x, scale_ref, norm_eps)
     gate = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
     up = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
     h = (_act(activation, gate) * up).astype(x.dtype)   # stays in VMEM
@@ -54,9 +76,14 @@ def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
 
 def streamed_ffn(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
                  *, activation: str = "silu",
+                 norm_scale: Optional[jax.Array] = None,
+                 norm_eps: float = 1e-6,
                  block_t: int = 256, block_f: int = 512,
                  interpret: Optional[bool] = None) -> jax.Array:
-    """x: [T, D]; wg/wu: [D, F]; wd: [F, D] -> [T, D]."""
+    """x: [T, D]; wg/wu: [D, F]; wd: [F, D] -> [T, D].
+
+    ``norm_scale`` [D]: fold ``rms_norm(x, norm_scale)`` into the kernel.
+    """
     t, d = x.shape
     d2, f = wg.shape
     assert d == d2 and wu.shape == (d, f) and wd.shape == (f, d)
@@ -65,59 +92,88 @@ def streamed_ffn(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
     grid = (t // bt, f // bf)
     interpret = interpret_default() if interpret is None else interpret
 
+    in_specs = [pl.BlockSpec((bt, d), lambda i, j: (i, 0))]
+    operands = [x]
+    if norm_scale is not None:
+        in_specs.append(pl.BlockSpec((d,), lambda i, j: (0,)))
+        operands.append(norm_scale)
+    in_specs += [
+        pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+        pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+        pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+    ]
+    operands += [wg, wu, wd]
+
     return pl.pallas_call(
-        functools.partial(_ffn_kernel, n_f=grid[1], activation=activation),
+        functools.partial(_ffn_kernel, n_f=grid[1], activation=activation,
+                          norm_eps=norm_eps if norm_scale is not None
+                          else None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
-            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
-            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
         interpret=interpret,
-    )(x, wg, wu, wd)
+    )(*operands)
+
+
+def _mlp_kernel(*refs, n_f: int, activation: str, norm_eps: Optional[float]):
+    if norm_eps is not None:
+        x_ref, scale_ref, wu_ref, wd_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, wu_ref, wd_ref, o_ref, acc_ref = refs
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    if norm_eps is not None:
+        x = _rms_tile(x, scale_ref, norm_eps)
+    h = _act(activation,
+             jnp.dot(x, wu_ref[...],
+                     preferred_element_type=jnp.float32)).astype(x.dtype)
+    acc_ref[...] += jnp.dot(h, wd_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == n_f - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
 def streamed_mlp(x: jax.Array, wu: jax.Array, wd: jax.Array, *,
                  activation: str = "gelu",
+                 norm_scale: Optional[jax.Array] = None,
+                 norm_eps: float = 1e-6,
                  block_t: int = 256, block_f: int = 512,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Ungated variant (GPT-2 / HuBERT): down(act(x @ Wu))."""
     t, d = x.shape
     _, f = wu.shape
-
-    def kernel(x_ref, wu_ref, wd_ref, o_ref, acc_ref, *, n_f: int):
-        @pl.when(pl.program_id(1) == 0)
-        def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-
-        h = _act(activation,
-                 jnp.dot(x_ref[...], wu_ref[...],
-                         preferred_element_type=jnp.float32)).astype(x.dtype)
-        acc_ref[...] += jnp.dot(h, wd_ref[...],
-                                preferred_element_type=jnp.float32)
-
-        @pl.when(pl.program_id(1) == n_f - 1)
-        def _done():
-            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
-
     bt = pick_block(t, block_t)
     bf = pick_block(f, block_f)
     grid = (t // bt, f // bf)
     interpret = interpret_default() if interpret is None else interpret
+
+    in_specs = [pl.BlockSpec((bt, d), lambda i, j: (i, 0))]
+    operands = [x]
+    if norm_scale is not None:
+        in_specs.append(pl.BlockSpec((d,), lambda i, j: (0,)))
+        operands.append(norm_scale)
+    in_specs += [
+        pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+        pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+    ]
+    operands += [wu, wd]
+
     return pl.pallas_call(
-        functools.partial(kernel, n_f=grid[1]),
+        functools.partial(_mlp_kernel, n_f=grid[1], activation=activation,
+                          norm_eps=norm_eps if norm_scale is not None
+                          else None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
-            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
         interpret=interpret,
-    )(x, wu, wd)
+    )(*operands)

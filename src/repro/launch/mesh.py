@@ -13,20 +13,26 @@ from typing import Optional, Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Version-tolerant ``jax.make_mesh``: ``axis_types`` (with Auto axes)
+    only exists on newer jax; older releases default every axis to Auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """The grading mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (tests use small host-device meshes, e.g. (2,4))."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -35,5 +41,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         raise ValueError(f"mesh {data}x{model} needs {data*model} devices, "
                          f"have {n}")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))

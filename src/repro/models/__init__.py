@@ -1,14 +1,15 @@
 """Executable JAX models for the assigned architectures."""
 
 from .model import (decode_step, forward_hidden, forward_train, prefill,
-                    streamed_xent)
+                    resolve_plan, streamed_xent)
 from .params import (abstract_cache, abstract_params, cache_defs,
                      cache_logical_axes, init_cache, init_params,
                      logical_axes, model_defs, padded_vocab, param_bytes)
 
 __all__ = [
     "decode_step", "forward_hidden", "forward_train", "prefill",
-    "streamed_xent", "abstract_cache", "abstract_params", "cache_defs",
+    "resolve_plan", "streamed_xent",
+    "abstract_cache", "abstract_params", "cache_defs",
     "cache_logical_axes", "init_cache", "init_params", "logical_axes",
     "model_defs", "padded_vocab", "param_bytes",
 ]

@@ -281,6 +281,17 @@ def ffn(x: jax.Array, p: Params, *, activation: str,
     return h @ p["wd"]
 
 
+def moe_gates(x: jax.Array, wr: jax.Array, top_k: int) -> jax.Array:
+    """Router: renormalized top-k gate weights [..., E] (zero off-top-k)."""
+    logits = x @ wr
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, _ = lax.top_k(probs, top_k)
+    thresh = top_vals[..., -1:]
+    gates = jnp.where(probs >= thresh, probs, 0.0)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates.astype(x.dtype)
+
+
 def moe_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
             num_experts: int, top_k: int) -> jax.Array:
     """Dense-gather MoE: every expert computes on the full token set, gated
@@ -291,13 +302,7 @@ def moe_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
     all-to-all of dispatch-based MoE is traded for FLOPs that XLA prunes on
     the expert axis when gates are sparse.  Exact (same math as dispatch).
     """
-    logits = x @ p["wr"]                                    # [..., E]
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    top_vals, _ = lax.top_k(probs, top_k)
-    thresh = top_vals[..., -1:]
-    gates = jnp.where(probs >= thresh, probs, 0.0)
-    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
-    gates = gates.astype(x.dtype)
+    gates = moe_gates(x, p["wr"], top_k)
     if gated:
         gate_h = _act(activation, jnp.einsum("...d,edf->...ef", x, p["wg"]))
         up_h = jnp.einsum("...d,edf->...ef", x, p["wu"])
@@ -462,6 +467,212 @@ def token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
     if prev is None:
         prev = jnp.zeros_like(x[:, :1])
     return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _pallas_fwd_eager_bwd(fused_fn, eager_fn):
+    """Pallas forward, eager-recompute backward.
+
+    ``pl.pallas_call`` has no autodiff rule, so every fused wrapper pairs
+    the kernel with the jnp formulation it replaces: the primal runs the
+    Pallas kernel; the cotangent recomputes through the eager path's VJP
+    (flash-attention-style recompute — no kernel-side residuals).  Gradients
+    are therefore *exactly* the eager path's gradients; only the forward
+    value carries kernel-tiling numerics.
+    """
+    f = jax.custom_vjp(fused_fn)
+
+    def fwd(*args):
+        return fused_fn(*args), args
+
+    def bwd(args, g):
+        return jax.vjp(eager_fn, *args)[1](g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _flat_tokens(x: jax.Array) -> Tuple[jax.Array, Tuple[int, int]]:
+    """[B, S, D] -> ([B*S, D], (B, S)) for the token-major kernels."""
+    b, s, d = x.shape
+    return x.reshape(b * s, d), (b, s)
+
+
+def fused_norm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
+                      eps: float = 1e-6, block_t: int = 256,
+                      block_n: int = 512) -> jax.Array:
+    """rms_norm(x) @ w via the ``rmsnorm_matmul`` Pallas kernel.
+
+    x: [B, S, D]; w: [D, N] -> [B, S, N].  The normalized activation lives
+    only in VMEM (norm stats recomputed per token tile).
+    """
+    from ..kernels import rmsnorm_matmul as _kernel
+
+    def fused(x, scale, w):
+        xf, (b, s) = _flat_tokens(x)
+        y = _kernel(xf, scale, w, eps=eps, block_t=block_t, block_n=block_n)
+        return y.reshape(b, s, w.shape[-1])
+
+    def eager(x, scale, w):
+        return rms_norm(x, scale, eps) @ w
+
+    return _pallas_fwd_eager_bwd(fused, eager)(x, scale, w)
+
+
+def fused_matmul(x: jax.Array, w: jax.Array, *, block_t: int = 256,
+                 block_n: int = 256, block_k: int = 512) -> jax.Array:
+    """x @ w via the tiled ``block_matmul`` Pallas kernel ([B,S,D] layout)."""
+    from ..kernels import block_matmul as _kernel
+
+    def fused(x, w):
+        xf, (b, s) = _flat_tokens(x)
+        y = _kernel(xf, w, block_m=block_t, block_n=block_n, block_k=block_k)
+        return y.reshape(b, s, w.shape[-1])
+
+    return _pallas_fwd_eager_bwd(fused, lambda x, w: x @ w)(x, w)
+
+
+def fused_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
+              norm_scale: Optional[jax.Array] = None,
+              block_t: int = 256, block_f: int = 512) -> jax.Array:
+    """Stream-fused (GLU) FFN; with ``norm_scale`` the pre-FFN RMSNorm is
+    folded into the kernel so the normalized stream never leaves VMEM."""
+    from ..kernels import streamed_ffn, streamed_mlp
+
+    if gated:
+        def fused(x, wg, wu, wd, *norm):
+            xf, (b, s) = _flat_tokens(x)
+            y = streamed_ffn(xf, wg, wu, wd, activation=activation,
+                             norm_scale=norm[0] if norm else None,
+                             block_t=block_t, block_f=block_f)
+            return y.reshape(b, s, -1)
+
+        def eager(x, wg, wu, wd, *norm):
+            h = rms_norm(x, norm[0]) if norm else x
+            return (_act(activation, h @ wg) * (h @ wu)) @ wd
+
+        args = (x, p["wg"], p["wu"], p["wd"])
+    else:
+        def fused(x, wu, wd, *norm):
+            xf, (b, s) = _flat_tokens(x)
+            y = streamed_mlp(xf, wu, wd, activation=activation,
+                             norm_scale=norm[0] if norm else None,
+                             block_t=block_t, block_f=block_f)
+            return y.reshape(b, s, -1)
+
+        def eager(x, wu, wd, *norm):
+            h = rms_norm(x, norm[0]) if norm else x
+            return _act(activation, h @ wu) @ wd
+
+        args = (x, p["wu"], p["wd"])
+    if norm_scale is not None:
+        args = args + (norm_scale,)
+    return _pallas_fwd_eager_bwd(fused, eager)(*args)
+
+
+def fused_moe_ffn(x: jax.Array, p: Params, *, activation: str,
+                  top_k: int, block_t: int = 256) -> jax.Array:
+    """Router eager (tiny), experts via the ``moe_experts`` Pallas kernel."""
+    from ..kernels import moe_experts_pallas
+
+    gates = moe_gates(x, p["wr"], top_k)
+
+    def fused(x, gates, wg, wu, wd):
+        xf, (b, s) = _flat_tokens(x)
+        gf = gates.reshape(b * s, -1)
+        y = moe_experts_pallas(xf, gf, wg, wu, wd, activation=activation,
+                               block_t=block_t)
+        return y.reshape(b, s, -1)
+
+    def eager(x, gates, wg, wu, wd):
+        gate_h = _act(activation, jnp.einsum("...d,edf->...ef", x, wg))
+        up_h = jnp.einsum("...d,edf->...ef", x, wu)
+        y = jnp.einsum("...ef,efd->...ed", gate_h * up_h, wd)
+        return jnp.einsum("...ed,...e->...d", y, gates)
+
+    return _pallas_fwd_eager_bwd(fused, eager)(
+        x, gates, p["wg"], p["wu"], p["wd"])
+
+
+def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512) -> jax.Array:
+    """Flash-attention Pallas kernel with GQA; eager backward recomputes
+    through ``streaming_attention`` / ``local_attention``."""
+    from ..kernels import flash_attention
+
+    def fused(q, k, v):
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv)
+
+    def eager(q, k, v):
+        if window:
+            return local_attention(q, k, v, window=window)
+        return streaming_attention(q, k, v, causal=causal)
+
+    return _pallas_fwd_eager_bwd(fused, eager)(q, k, v)
+
+
+def fused_mamba2_ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                     b: jax.Array, c: jax.Array, d_skip: jax.Array, *,
+                     chunk: int = 128) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan via the ``mamba2_scan`` Pallas kernel."""
+    from ..kernels import mamba2_ssd_pallas
+
+    def fused(x, dt, a_log, b, c, d_skip):
+        return mamba2_ssd_pallas(x, dt, a_log, b, c, d_skip, chunk=chunk)
+
+    def eager(x, dt, a_log, b, c, d_skip):
+        return mamba2_ssd(x, dt, a_log, b, c, d_skip, chunk=chunk)
+
+    return _pallas_fwd_eager_bwd(fused, eager)(x, dt, a_log, b, c, d_skip)
+
+
+def fused_wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, *, chunk: int = 64,
+               ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 recurrence via the ``rwkv6_wkv`` Pallas kernel."""
+    from ..kernels import wkv6_pallas
+
+    def fused(r, k, v, w, u):
+        return wkv6_pallas(r, k, v, w, u, chunk=chunk)
+
+    def eager(r, k, v, w, u):
+        return wkv6(r, k, v, w, u)
+
+    return _pallas_fwd_eager_bwd(fused, eager)(r, k, v, w, u)
+
+
+def fused_streamed_xent(hidden: jax.Array, head: jax.Array,
+                        labels: jax.Array, vocab_size: int, *,
+                        block_t: int = 256, block_v: int = 2048) -> jax.Array:
+    """Streamed CE loss via the ``streamed_xent`` Pallas kernel: [T, V]
+    logits never materialize in the forward; the backward recomputes the
+    logits from the (hidden, head) residuals through the eager formulation
+    (labels ride along as an integer primal so the VJP structure is right —
+    their cotangent is the symbolic zero)."""
+    from ..kernels import streamed_xent_loss
+
+    def fused(hidden, head, labels):
+        hf, (b, s) = _flat_tokens(hidden)
+        return streamed_xent_loss(hf, head, labels.reshape(b * s),
+                                  vocab_size=vocab_size,
+                                  block_t=block_t, block_v=block_v)
+
+    def eager(hidden, head, labels):
+        hf, (b, s) = _flat_tokens(hidden)
+        logits = (hf @ head).astype(jnp.float32)
+        vp = logits.shape[-1]
+        logits = jnp.where((jnp.arange(vp) >= vocab_size)[None], NEG_INF,
+                           logits)
+        lf = labels.reshape(b * s)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lf, 0)[:, None], axis=-1)[:, 0]
+        valid = lf >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+    return _pallas_fwd_eager_bwd(fused, eager)(hidden, head, labels)
 
 
 def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,

@@ -29,6 +29,44 @@ from . import layers as L
 from .params import padded_vocab
 
 Tree = Any
+Plan = Any          # core.stream_plan.StreamPlan (imported lazily)
+LPlan = Any         # core.stream_plan.LayerPlan
+
+
+def resolve_plan(cfg: ModelConfig, tokens: int, *,
+                 kv_len: Optional[int] = None,
+                 plan: Optional[Plan] = None) -> Optional[Plan]:
+    """The StreamPlan driving fused-kernel dispatch, or None for eager.
+
+    An explicit ``plan`` wins; otherwise ``cfg.use_fused_kernels`` triggers
+    the (cached) compiler pipeline in ``core.stream_plan``.  Resolution
+    happens at trace time — the plan is static under jit.
+    """
+    if plan is not None:
+        return plan
+    if not cfg.use_fused_kernels:
+        return None
+    from ..core.stream_plan import plan_for
+    return plan_for(cfg, tokens, kv_len)
+
+
+def _lplan(plan: Optional[Plan], kind: str) -> Optional[LPlan]:
+    return plan.layer(kind) if plan is not None else None
+
+
+def _cache_kv_len(cfg: ModelConfig, cache: Tree) -> Optional[int]:
+    """Max KV length held by a decode cache (None for pure SSM caches).
+
+    Stacked K leaves are [G, B, S, Hkv, hd] ("bshd") or [G, B, Hkv, S, hd]
+    ("bhsd"); used so the decode plan's DSE models attention over the real
+    cache extent rather than the (tiny) per-step token count.
+    """
+    axis = 3 if cfg.kv_cache_layout == "bhsd" else 2
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "k":
+            return int(leaf.shape[axis])
+    return None
 
 
 def _c(cfg: ModelConfig, x: jax.Array) -> jax.Array:
@@ -59,23 +97,56 @@ def _qk_normed(cfg: ModelConfig, p: Tree, q: jax.Array,
     return (L.rms_norm(q, p["q_norm"]), L.rms_norm(k, p["k_norm"]))
 
 
-def _attn_full(cfg: ModelConfig, p: Tree, x: jax.Array,
-               positions: jax.Array, *, window: int,
-               collect: bool) -> Tuple[jax.Array, Optional[Tree]]:
-    b, s, d = x.shape
-    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+def _project_qkv(cfg: ModelConfig, p: Tree, x: jax.Array, ln_p: Tree,
+                 lplan: Optional[LPlan],
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """ln + Q/K/V projections, eager or plan-fused.
+
+    With ``rmsnorm_matmul`` the norm is folded into each projection (norm
+    stats recomputed per kernel — VPU work traded for the HBM round-trip of
+    the normalized stream); with ``block_matmul`` the norm stays eager and
+    the projections run through the tiled Pallas matmul.
+    """
+    choice = lplan.qkv if lplan is not None else None
+    if choice is not None and choice.fused:
+        kw = choice.kw
+        if choice.implementation == "rmsnorm_matmul":
+            q = L.fused_norm_matmul(x, ln_p["scale"], p["wq"], **kw)
+            k = L.fused_norm_matmul(x, ln_p["scale"], p["wk"], **kw)
+            v = L.fused_norm_matmul(x, ln_p["scale"], p["wv"], **kw)
+        else:
+            h = L.apply_norm(cfg.norm, x, ln_p)
+            q = L.fused_matmul(h, p["wq"], **kw)
+            k = L.fused_matmul(h, p["wk"], **kw)
+            v = L.fused_matmul(h, p["wv"], **kw)
+    else:
+        h = L.apply_norm(cfg.norm, x, ln_p)
+        q = h @ p["wq"]
+        k = h @ p["wk"]
+        v = h @ p["wv"]
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _attn_full(cfg: ModelConfig, p: Tree, x: jax.Array, ln_p: Tree,
+               positions: jax.Array, *, window: int, collect: bool,
+               lplan: Optional[LPlan] = None,
+               ) -> Tuple[jax.Array, Optional[Tree]]:
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q, k, v = _project_qkv(cfg, p, x, ln_p, lplan)
     q = q.reshape(b, s, hq, hd)
     k = k.reshape(b, s, hkv, hd)
     v = v.reshape(b, s, hkv, hd)
     q, k = _qk_normed(cfg, p, q, k)
     q = L.apply_positional(cfg.rope, q, positions, cfg.rope_theta)
     k = L.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
-    if window:
+    attn_c = lplan.attention if lplan is not None else None
+    if attn_c is not None and attn_c.fused:
+        o = L.fused_attention(q, k, v, causal=cfg.causal, window=window,
+                              **attn_c.kw)
+    elif window:
         o = L.local_attention(q, k, v, window=window,
                               remat_chunk=cfg.remat_attn_chunk)
     else:
@@ -98,20 +169,45 @@ def _ffn_apply(cfg: ModelConfig, p: Tree, x: jax.Array) -> jax.Array:
     return L.ffn(x, p, activation=cfg.activation, gated=cfg.gated_ffn)
 
 
+def _ffn_block(cfg: ModelConfig, p: Tree, x: jax.Array, ln_p: Tree,
+               lplan: Optional[LPlan]) -> jax.Array:
+    """ln2 + FFN/MoE, eager or plan-fused.  ``fuse_norm`` in the choice
+    folds the RMSNorm into the streamed FFN kernel itself."""
+    choice = lplan.ffn if lplan is not None else None
+    if choice is not None and choice.fused:
+        kw = choice.kw
+        if choice.implementation == "moe_experts":
+            h2 = L.apply_norm(cfg.norm, x, ln_p)
+            return L.fused_moe_ffn(h2, p, activation=cfg.activation,
+                                   top_k=cfg.top_k, **kw)
+        fuse_norm = bool(kw.pop("fuse_norm", 0))
+        if fuse_norm:
+            return L.fused_ffn(x, p, activation=cfg.activation,
+                               gated=cfg.gated_ffn,
+                               norm_scale=ln_p["scale"], **kw)
+        h2 = L.apply_norm(cfg.norm, x, ln_p)
+        return L.fused_ffn(h2, p, activation=cfg.activation,
+                           gated=cfg.gated_ffn, **kw)
+    h2 = L.apply_norm(cfg.norm, x, ln_p)
+    return _ffn_apply(cfg, p, h2)
+
+
 def _attn_block_full(cfg: ModelConfig, p: Tree, x: jax.Array,
                      positions: jax.Array, *, window: int = 0,
-                     collect: bool = False) -> Tuple[jax.Array, Optional[Tree]]:
-    h = L.apply_norm(cfg.norm, x, p["ln1"])
-    attn_out, kv = _attn_full(cfg, p["attn"], h, positions, window=window,
-                              collect=collect)
+                     collect: bool = False,
+                     lplan: Optional[LPlan] = None,
+                     ) -> Tuple[jax.Array, Optional[Tree]]:
+    attn_out, kv = _attn_full(cfg, p["attn"], x, p["ln1"], positions,
+                              window=window, collect=collect, lplan=lplan)
     x = x + attn_out
-    h2 = L.apply_norm(cfg.norm, x, p["ln2"])
-    x = x + _ffn_apply(cfg, p["mlp"], h2)
+    x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
     return x, kv
 
 
 def _mamba_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
-                      collect: bool = False) -> Tuple[jax.Array, Optional[Tree]]:
+                      collect: bool = False,
+                      lplan: Optional[LPlan] = None,
+                      ) -> Tuple[jax.Array, Optional[Tree]]:
     b, s, d = x.shape
     m = p["mamba"]
     h = L.apply_norm(cfg.norm, x, p["ln"])
@@ -123,9 +219,15 @@ def _mamba_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
                          + m["dt_bias"].astype(h.dtype))   # [B,S,H]
     xconv, conv_tail = L.causal_conv1d(xin, m["conv_w"], m["conv_b"])
     hps = xconv.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
-    chunk = _chunk_of(s, 128)
-    y, state = L.mamba2_ssd(hps, dt, m["a_log"], bmat, cmat, m["d_skip"],
-                            chunk=chunk)
+    mixer = lplan.mixer if lplan is not None else None
+    if mixer is not None and mixer.fused:
+        chunk = _chunk_of(s, mixer.kw.get("chunk", 128))
+        y, state = L.fused_mamba2_ssd(hps, dt, m["a_log"], bmat, cmat,
+                                      m["d_skip"], chunk=chunk)
+    else:
+        chunk = _chunk_of(s, 128)
+        y, state = L.mamba2_ssd(hps, dt, m["a_log"], bmat, cmat,
+                                m["d_skip"], chunk=chunk)
     y = y.reshape(b, s, cfg.d_inner) * jax.nn.silu(z)
     x = x + y @ m["wout"]
     aux = {"ssm": state.astype(jnp.float32),
@@ -134,7 +236,9 @@ def _mamba_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
 
 
 def _rwkv_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
-                     collect: bool = False) -> Tuple[jax.Array, Optional[Tree]]:
+                     collect: bool = False,
+                     lplan: Optional[LPlan] = None,
+                     ) -> Tuple[jax.Array, Optional[Tree]]:
     b, s, d = x.shape
     h, n = cfg.rwkv_heads, cfg.rwkv_head_dim
     tm, cm = p["tm"], p["cm"]
@@ -153,7 +257,11 @@ def _rwkv_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
     wdec = jnp.exp(-jnp.exp(
         (mix("w") @ tm["ww"]).astype(jnp.float32)
         + tm["w_bias"].reshape(1, 1, h * n))).reshape(b, s, h, n)
-    if cfg.rwkv_chunk > 0:
+    mixer = lplan.mixer if lplan is not None else None
+    if mixer is not None and mixer.fused:
+        y, state = L.fused_wkv6(r, k, v, wdec, tm["u"],
+                                chunk=_chunk_of(s, mixer.kw.get("chunk", 64)))
+    elif cfg.rwkv_chunk > 0:
         y, state = L.wkv6_chunked(r, k, v, wdec, tm["u"],
                                   chunk=cfg.rwkv_chunk)
     else:
@@ -179,20 +287,22 @@ def _rwkv_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
 
 def _apply_block_full(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
                       x: jax.Array, positions: jax.Array,
-                      collect: bool) -> Tuple[jax.Array, Tree]:
+                      collect: bool,
+                      lplan: Optional[LPlan] = None) -> Tuple[jax.Array, Tree]:
     if kind == "rwkv":
-        return _rwkv_block_full(cfg, p, x, collect=collect)
+        return _rwkv_block_full(cfg, p, x, collect=collect, lplan=lplan)
     if kind == "mamba":
-        return _mamba_block_full(cfg, p, x, collect=collect)
+        return _mamba_block_full(cfg, p, x, collect=collect, lplan=lplan)
     if kind == "mamba+shared_attn":
-        x, aux = _mamba_block_full(cfg, p, x, collect=collect)
-        x, kv = _attn_block_full(cfg, shared, x, positions, collect=collect)
+        x, aux = _mamba_block_full(cfg, p, x, collect=collect, lplan=lplan)
+        x, kv = _attn_block_full(cfg, shared, x, positions, collect=collect,
+                                 lplan=lplan)
         if collect:
             aux = {**aux, **kv}
         return x, aux
     window = cfg.sliding_window if kind == "local_attn" else 0
     return _attn_block_full(cfg, p, x, positions, window=window,
-                            collect=collect)
+                            collect=collect, lplan=lplan)
 
 
 # --------------------------------------------------------------------- #
@@ -226,7 +336,8 @@ def forward_hidden(params: Tree, cfg: ModelConfig,
                    batch: Dict[str, jax.Array], *,
                    remat: bool = True,
                    act_sharding=None,
-                   act_pin_scope: str = "all") -> jax.Array:
+                   act_pin_scope: str = "all",
+                   plan: Optional[Plan] = None) -> jax.Array:
     """Embedding + all blocks + final norm -> hidden states [B,S,D].
 
     ``act_sharding``: optional NamedSharding pinning the residual stream
@@ -234,6 +345,10 @@ def forward_hidden(params: Tree, cfg: ModelConfig,
     intermediates across the model axis — measured as f32 activation
     all-gathers/all-reduces per layer on llama3-8b).  ``act_pin_scope``:
     'all' pins every block boundary, 'embed' only the scan entry.
+
+    ``plan``: a ``core.stream_plan.StreamPlan`` (or None).  When set (or
+    when ``cfg.use_fused_kernels`` resolves one), blocks dispatch to the
+    fused Pallas kernels the compiler pipeline selected.
     """
     pin_all = act_sharding is not None and act_pin_scope == "all"
     pin = ((lambda a: jax.lax.with_sharding_constraint(a, act_sharding))
@@ -241,6 +356,7 @@ def forward_hidden(params: Tree, cfg: ModelConfig,
     pin_block = pin if pin_all else (lambda a: a)
     params = _cast_tree(cfg, params)
     x, positions = _embed_in(cfg, params, batch)
+    plan = resolve_plan(cfg, x.shape[0] * x.shape[1], plan=plan)
     x = pin(x)
     period = len(cfg.layer_pattern)
     groups = cfg.num_layers // period
@@ -250,7 +366,8 @@ def forward_hidden(params: Tree, cfg: ModelConfig,
         for pidx in range(period):
             kind = cfg.layer_pattern[pidx]
             x, _ = _apply_block_full(cfg, kind, block_params[pidx], shared,
-                                     x, positions, collect=False)
+                                     x, positions, collect=False,
+                                     lplan=_lplan(plan, kind))
             x = pin_block(x)
         return x, None
 
@@ -260,7 +377,7 @@ def forward_hidden(params: Tree, cfg: ModelConfig,
     for i, bp in enumerate(params["rest"]):
         kind = cfg.layer_kind(groups * period + i)
         x, _ = _apply_block_full(cfg, kind, bp, shared, x, positions,
-                                 collect=False)
+                                 collect=False, lplan=_lplan(plan, kind))
         x = pin_block(x)
     return L.apply_norm(cfg.norm, x, params["final_norm"])
 
@@ -304,25 +421,32 @@ def streamed_xent(hidden: jax.Array, head: jax.Array, labels: jax.Array,
 def forward_train(params: Tree, cfg: ModelConfig,
                   batch: Dict[str, jax.Array], *,
                   remat: bool = True, act_sharding=None,
-                  act_pin_scope: str = "all") -> jax.Array:
+                  act_pin_scope: str = "all",
+                  plan: Optional[Plan] = None) -> jax.Array:
     """Streamed-CE training loss."""
+    labels = batch["labels"]
+    plan = resolve_plan(cfg, labels.shape[0] * labels.shape[1], plan=plan)
     hidden = forward_hidden(params, cfg, batch, remat=remat,
                             act_sharding=act_sharding,
-                            act_pin_scope=act_pin_scope)
+                            act_pin_scope=act_pin_scope, plan=plan)
     head = _c(cfg, params["lm_head"])
-    return streamed_xent(hidden, head, batch["labels"], cfg.vocab_size)
+    if plan is not None and plan.lm_head.fused:
+        return L.fused_streamed_xent(hidden, head, labels, cfg.vocab_size,
+                                     **plan.lm_head.kw)
+    return streamed_xent(hidden, head, labels, cfg.vocab_size)
 
 
 # --------------------------------------------------------------------- #
 # Prefill
 # --------------------------------------------------------------------- #
 
-def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array],
-            ) -> Tuple[jax.Array, Tree]:
+def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            plan: Optional[Plan] = None) -> Tuple[jax.Array, Tree]:
     """Forward pass that also returns decode caches (sized at the prompt
     length; the serving layer places them into max-length buffers)."""
     params = _cast_tree(cfg, params)
     x, positions = _embed_in(cfg, params, batch)
+    plan = resolve_plan(cfg, x.shape[0] * x.shape[1], plan=plan)
     period = len(cfg.layer_pattern)
     groups = cfg.num_layers // period
     shared = params.get("shared")
@@ -332,7 +456,8 @@ def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array],
         for pidx in range(period):
             kind = cfg.layer_pattern[pidx]
             x, aux = _apply_block_full(cfg, kind, block_params[pidx], shared,
-                                       x, positions, collect=True)
+                                       x, positions, collect=True,
+                                       lplan=_lplan(plan, kind))
             auxes.append(aux)
         return x, tuple(auxes)
 
@@ -344,7 +469,7 @@ def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array],
     for i, bp in enumerate(params["rest"]):
         kind = cfg.layer_kind(groups * period + i)
         x, aux = _apply_block_full(cfg, kind, bp, shared, x, positions,
-                                   collect=True)
+                                   collect=True, lplan=_lplan(plan, kind))
         caches_rest.append(jax.tree.map(lambda a: a[None], aux))
     x = L.apply_norm(cfg.norm, x, params["final_norm"])
     logits = (x[:, -1:] @ _c(cfg, params["lm_head"])).astype(jnp.float32)
@@ -361,17 +486,18 @@ def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array],
 def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
                        cache: Tree, cache_pos: jax.Array,
                        lengths: jax.Array, *, window: int = 0,
+                       lplan: Optional[LPlan] = None,
                        ) -> Tuple[jax.Array, Tree]:
-    """x: [B,1,D]; cache: {"k","v"} [B,Smax,Hkv,hd]."""
+    """x: [B,1,D]; cache: {"k","v"} [B,Smax,Hkv,hd].
+
+    The fused plan covers the projections and the FFN; single-token
+    attention itself stays on the XLA path (``decode_attention``) — a
+    flash grid is degenerate at Sq=1 and the reduction is memory-bound.
+    """
     b = x.shape[0]
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
-    h = L.apply_norm(cfg.norm, x, p["ln1"])
     ap = p["attn"]
-    q = h @ ap["wq"]
-    k = h @ ap["wk"]
-    v = h @ ap["wv"]
-    if cfg.qkv_bias:
-        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q, k, v = _project_qkv(cfg, ap, x, p["ln1"], lplan)
     q = q.reshape(b, 1, hq, hd)
     k = k.reshape(b, 1, hkv, hd)
     v = v.reshape(b, 1, hkv, hd)
@@ -399,8 +525,7 @@ def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
     o = L.decode_attention(q, kc, vc, lengths + 1, window=window,
                            layout=cfg.kv_cache_layout)
     x = x + o.reshape(b, 1, hq * hd) @ ap["wo"]
-    h2 = L.apply_norm(cfg.norm, x, p["ln2"])
-    x = x + _ffn_apply(cfg, p["mlp"], h2)
+    x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
     return x, {"k": kc, "v": vc}
 
 
@@ -470,7 +595,8 @@ def _rwkv_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
 
 def _apply_block_decode(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
                         x: jax.Array, cache: Tree, cache_pos: jax.Array,
-                        lengths: jax.Array) -> Tuple[jax.Array, Tree]:
+                        lengths: jax.Array,
+                        lplan: Optional[LPlan] = None) -> Tuple[jax.Array, Tree]:
     if kind == "rwkv":
         return _rwkv_block_decode(cfg, p, x, cache)
     if kind == "mamba":
@@ -480,15 +606,16 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
         attn_cache = {"k": cache["k"], "v": cache["v"]}
         x, nm = _mamba_block_decode(cfg, p, x, mamba_cache)
         x, na = _attn_block_decode(cfg, shared, x, attn_cache, cache_pos,
-                                   lengths)
+                                   lengths, lplan=lplan)
         return x, {**nm, **na}
     window = cfg.sliding_window if kind == "local_attn" else 0
     return _attn_block_decode(cfg, p, x, cache, cache_pos, lengths,
-                              window=window)
+                              window=window, lplan=lplan)
 
 
 def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
-                cache: Tree, cache_pos: jax.Array, lengths: jax.Array,
+                cache: Tree, cache_pos: jax.Array, lengths: jax.Array, *,
+                plan: Optional[Plan] = None,
                 ) -> Tuple[jax.Array, jax.Array, Tree]:
     """One decoding step.
 
@@ -501,6 +628,8 @@ def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
     x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
     if cfg.rope == "none" and "pos_embed" in params:
         x = x + _c(cfg, params["pos_embed"])[cache_pos][None, None]
+    plan = resolve_plan(cfg, tokens.shape[0],
+                        kv_len=_cache_kv_len(cfg, cache), plan=plan)
     period = len(cfg.layer_pattern)
     groups = cfg.num_layers // period
     shared = params.get("shared")
@@ -512,7 +641,7 @@ def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
             kind = cfg.layer_pattern[pidx]
             x, nc = _apply_block_decode(cfg, kind, block_params[pidx],
                                         shared, x, cache_g[pidx], cache_pos,
-                                        lengths)
+                                        lengths, lplan=_lplan(plan, kind))
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -526,7 +655,8 @@ def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
         kind = cfg.layer_kind(groups * period + i)
         c_i = jax.tree.map(lambda a: a[0], cache["rest"][i])
         x, nc = _apply_block_decode(cfg, kind, bp, shared, x, c_i,
-                                    cache_pos, lengths)
+                                    cache_pos, lengths,
+                                    lplan=_lplan(plan, kind))
         new_rest.append(jax.tree.map(lambda a: a[None], nc))
     x = L.apply_norm(cfg.norm, x, params["final_norm"])
     logits = (x @ _c(cfg, params["lm_head"])).astype(jnp.float32)

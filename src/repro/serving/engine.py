@@ -2,24 +2,44 @@
 
 A deliberately small continuous-batching engine (the serving twin of the
 trainer): requests enter a queue, get assigned cache slots, prefill fills a
-slot's KV/state, and one jitted decode step advances every active slot per
-tick.  Works on CPU for the examples/tests and under any mesh for a real
+slot's KV/state, and jitted decode dispatches advance every active slot.
+Works on CPU for the examples/tests and under any mesh for a real
 deployment (the decode step is the dry-run's serve_step).
 
-Decode-cache note: slots share one max_len cache allocation; prefill caches
-(sized at the prompt) are padded in.  All sequences in a tick share the
-write position (static-shape decode); per-slot lengths mask attention.
+Decode fast path (§Perf, this is the hot loop):
+
+  * The slot cache is allocated ONCE at ``max_len`` (``init_cache``) and
+    prefill results are *placed into it* inside the prefill jit via
+    ``dynamic_update_slice`` — the old per-wave host-side
+    ``_pad_cache_seq`` materialized a fresh full-size padded copy of every
+    K/V buffer per wave.  Stale K/V beyond the prompt length is never read:
+    decode attention masks strictly by per-slot ``lengths``.
+  * The cache is DONATED through both the placement and decode dispatches
+    (``donate_argnums``), so XLA updates the K/V buffers in place instead
+    of copying the whole cache every step.
+  * Decode runs ``decode_block`` (>= 8) ticks per jitted dispatch as a
+    ``lax.scan`` over ``decode_step`` — one host round-trip per block of
+    tokens instead of per token.  The scan always runs the full block
+    (single compiled program); host-side bookkeeping discards tokens past a
+    request's budget or ``max_len`` (writes past ``max_len`` clamp into the
+    final cache rows, which is safe: the wave terminates there and the
+    cache is re-placed at the next prefill).
+
+All sequences in a tick share the write position (static-shape decode);
+per-slot lengths mask attention.  Tail waves are padded to the slot count
+with a dummy prompt so every dispatch reuses the same compiled program.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from ..configs.base import ModelConfig
 from ..models import decode_step, init_cache, prefill
@@ -47,31 +67,75 @@ class Request:
         return self.finished_at - self.submitted_at
 
 
-def _pad_cache_seq(cache: Tree, max_len: int) -> Tree:
-    def pad(path, a):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        if name in ("k", "v"):
-            pad_n = max_len - a.shape[2]
-            return jnp.pad(a, ((0, 0), (0, 0), (0, pad_n), (0, 0), (0, 0)))
-        return a
-    return jax.tree_util.tree_map_with_path(pad, cache)
+def _seq_axis(path, layout: str) -> Optional[int]:
+    """Sequence axis of a stacked K/V cache leaf, None for non-KV leaves.
+
+    Leaves carry a leading layer-group axis: [G, B, S, Hkv, hd] ("bshd")
+    or [G, B, Hkv, S, hd] ("bhsd").
+    """
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    if name not in ("k", "v"):
+        return None
+    return 3 if layout == "bhsd" else 2
+
+
+def _place_cache(cache: Tree, fresh: Tree, layout: str) -> Tree:
+    """Write prompt-length prefill caches into the max-length slot cache.
+
+    K/V leaves are placed at sequence offset 0 of the preallocated buffer
+    (an in-place ``dynamic_update_slice`` under donation); state leaves
+    (SSM / conv / wkv / shifts) carry no sequence axis and replace the slot
+    buffer wholesale.
+    """
+    def place(path, big, small):
+        ax = _seq_axis(path, layout)
+        if ax is None:
+            return small.astype(big.dtype)
+        return lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), 0, axis=ax)
+    return jax.tree_util.tree_map_with_path(place, cache, fresh)
 
 
 class ServingEngine:
     """Batched greedy generation over a fixed slot count."""
 
     def __init__(self, cfg: ModelConfig, params: Tree, *,
-                 batch_slots: int = 4, max_len: int = 256):
+                 batch_slots: int = 4, max_len: int = 256,
+                 decode_block: int = 16):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
-        def _step(p, t, c, pos, lens):
-            nt, _logits, new_cache = decode_step(p, cfg, t, c, pos, lens)
-            return nt, new_cache
-        self._decode = jax.jit(_step)
-        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
-        self.metrics: Dict[str, float] = {"ticks": 0, "generated": 0}
+        self.decode_block = max(1, decode_block)
+
+        def _prefill_into(p, batch, slot_cache):
+            logits, fresh = prefill(p, cfg, batch)
+            placed = _place_cache(slot_cache, fresh, cfg.kv_cache_layout)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, placed
+
+        def _decode_n(p, tok, cache, pos, lengths):
+            def tick(carry, _):
+                tok, cache, pos, lengths = carry
+                nt, _logits, cache = decode_step(p, cfg, tok, cache, pos,
+                                                 lengths)
+                return (nt, cache, pos + 1, lengths + 1), nt[:, 0]
+
+            carry, toks = lax.scan(
+                tick, (tok, cache, pos, lengths), None,
+                length=self.decode_block)
+            tok, cache, pos, lengths = carry
+            return tok, cache, pos, lengths, toks      # toks: [N, B]
+
+        # Donate the slot cache through both dispatches: K/V updates happen
+        # in place instead of copying the max_len buffers every call.
+        self._prefill = jax.jit(_prefill_into, donate_argnums=(2,))
+        self._decode = jax.jit(_decode_n, donate_argnums=(2,))
+        self._slot_cache = init_cache(cfg, batch_slots, max_len)
+        self.metrics: Dict[str, float] = {
+            "ticks": 0, "generated": 0, "dispatches": 0,
+            "decode_block": self.decode_block,
+        }
 
     # -------------------------------------------------------------- API
     def generate(self, prompts: List[np.ndarray],
@@ -90,30 +154,42 @@ class ServingEngine:
     def _serve_wave(self, wave: List[Request]) -> None:
         b = len(wave)
         plen = wave[0].prompt.shape[0]
-        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in wave]))}
-        logits, cache = self._prefill(self.params, batch)
-        cache = _pad_cache_seq(cache, self.max_len)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # Pad tail waves to the slot count: one compiled program for every
+        # wave; padded rows are computed and discarded.
+        prompts = [r.prompt for r in wave]
+        prompts += [wave[0].prompt] * (self.slots - b)
+        batch = {"tokens": jnp.asarray(np.stack(prompts))}
+        next_tok, cache = self._prefill(self.params, batch, self._slot_cache)
+        # Reassign immediately after every donating dispatch: the donated
+        # input buffer is deleted on accelerator backends, and a mid-wave
+        # exception must not leave the engine holding a dead reference.
+        self._slot_cache = cache
         now = time.perf_counter()
-        for r, t in zip(wave, np.asarray(next_tok)[:, 0]):
+        for r, t in zip(wave, np.asarray(next_tok)[:b, 0]):
             r.out_tokens.append(int(t))
             r.first_token_at = now
-        lengths = jnp.full((b,), plen, jnp.int32)
+
+        lengths = jnp.full((self.slots,), plen, jnp.int32)
         pos = plen
         steps = max(r.max_new_tokens for r in wave) - 1
-        for _ in range(steps):
-            if pos >= self.max_len:
-                break
-            next_tok, cache = self._decode(self.params, next_tok, cache,
-                                           jnp.int32(pos), lengths)
+        done = 0
+        while done < steps and pos < self.max_len:
+            next_tok, cache, _pos, lengths, toks = self._decode(
+                self.params, next_tok, cache, jnp.int32(pos), lengths)
+            self._slot_cache = cache
             now = time.perf_counter()
-            for r, t in zip(wave, np.asarray(next_tok)[:, 0]):
-                if len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(t))
-            pos += 1
-            lengths = lengths + 1
-            self.metrics["ticks"] += 1
-            self.metrics["generated"] += b
+            usable = min(self.decode_block, steps - done,
+                         self.max_len - pos)
+            toks_np = np.asarray(toks)                  # [N, slots]
+            for j in range(usable):
+                for r, t in zip(wave, toks_np[j, :b]):
+                    if len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(t))
+            done += usable
+            pos += self.decode_block
+            self.metrics["dispatches"] += 1
+            self.metrics["ticks"] += self.decode_block
+            self.metrics["generated"] += b * usable
         now = time.perf_counter()
         for r in wave:
             r.done = True

@@ -4,8 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (conversion_cost_bytes, fig5_b, fig5_c, infer_converter,
                         itensor_from_tiling, min_buffer_tiles_sim, row_major,

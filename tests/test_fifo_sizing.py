@@ -5,8 +5,7 @@ import random
 
 import networkx as nx
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (DataflowGraph, KernelNode, KernelTiming,
                         EqualizationStrategy, max_tokens_exact,

@@ -1,8 +1,7 @@
 """Partitioning (vs brute force) + memory-tier allocation tests."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.allocation import (Buffer, MemoryTier, TPU_TIERS, U55C_TIERS,
                                    allocate)

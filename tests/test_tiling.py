@@ -3,8 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.platforms import TPU_V5E, U55C
 from repro.core.tiling import (PARALLEL, REDUCTION, LinalgOpSpec, LoopDim,
