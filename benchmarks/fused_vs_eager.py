@@ -4,14 +4,20 @@ Measures the three model entry points under both execution paths:
 
   * ``forward_train`` — streamed-CE loss latency (tokens/s),
   * ``prefill``       — prompt ingestion latency,
-  * decode            — engine tokens/s through the block-decode fast path
-    (``decode_block`` ticks per jitted dispatch, donated slot cache).
+  * decode            — engine tokens/s through the continuous-batching
+    block-decode fast path, CONTIGUOUS vs PAGED KV cache (tokens/s, peak
+    cache bytes-in-use vs reserved, dispatch count).  The paged run is the
+    engine default (page-table indirection + plan-selected Pallas paged
+    decode attention under ``fused``); the contiguous run keeps the PR-1
+    slots x max_len cache on the same scheduler for a like-for-like A/B.
 
 Run on CPU the Pallas kernels execute in *interpret mode* (the kernel body
 runs in Python per grid step), so fused numbers here validate the dispatch
 plumbing and measure the perf *trajectory*, not the TPU speedup — on TPU
-the same plan dispatches compiled MXU kernels.  The JSON records backend
-and interpret mode so downstream dashboards can bucket the numbers.
+the same plan dispatches compiled MXU kernels.  Every fused result embeds
+``interpret_mode`` so a fused-slower-than-eager row on CPU is read as the
+interpreter tax, not a kernel regression; the decode section's cache-bytes
+numbers are backend-independent.
 
     PYTHONPATH=src python benchmarks/fused_vs_eager.py [--quick] \
         [--out BENCH_fused.json]
@@ -62,7 +68,11 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0,
                               base.vocab_size)
     train_batch = {"tokens": toks, "labels": toks}
-    prompts = [np.asarray(toks[i]) for i in range(batch)]
+    # Heterogeneous prompt lengths: the continuous engine places each at
+    # its own offset, and the paged cache only allocates the pages each
+    # one actually needs (the contiguous cache reserves max_len for both).
+    prompts = [np.asarray(toks[i][:seq if i % 2 == 0 else seq // 2])
+               for i in range(batch)]
 
     result: Dict[str, Any] = {
         "arch": base.name, "batch": batch, "seq": seq,
@@ -82,23 +92,51 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
         prefill_s = _timed(lambda: prefill_fn(params, train_batch)[0], iters)
         losses[mode] = float(train_fn(params, train_batch))
 
-        engine = ServingEngine(cfg, params, batch_slots=batch,
-                               max_len=max_len, decode_block=decode_block)
-        engine.generate(prompts, max_new_tokens=2)   # compile prefill+decode
-        t0 = time.perf_counter()
-        reqs = engine.generate(prompts, max_new_tokens=new_tokens)
-        decode_s = time.perf_counter() - t0
-        generated = sum(len(r.out_tokens) for r in reqs)
+        decode: Dict[str, Any] = {}
+        for paged in (False, True):
+            engine = ServingEngine(cfg, params, batch_slots=batch,
+                                   max_len=max_len,
+                                   decode_block=decode_block, paged=paged)
+            engine.generate(prompts, max_new_tokens=2)  # compile
+            d0 = engine.metrics["dispatches"]
+            g0 = engine.metrics["generated"]
+            t0 = time.perf_counter()
+            reqs = engine.generate(prompts, max_new_tokens=new_tokens)
+            decode_s = time.perf_counter() - t0
+            generated = sum(len(r.out_tokens) for r in reqs)
+            decode["paged" if paged else "contiguous"] = {
+                "decode_s": decode_s,
+                "decode_tokens_per_s": generated / decode_s,
+                "ttft_s": float(np.mean([r.ttft_s for r in reqs])),
+                "dispatches": engine.metrics["dispatches"] - d0,
+                "generated": engine.metrics["generated"] - g0,
+                "kv_bytes_reserved": engine.metrics["kv_bytes_reserved"],
+                "kv_bytes_peak": engine.metrics["kv_bytes_peak"],
+                "page_size": engine.metrics["page_size"],
+            }
+        decode["paged_over_contiguous_bytes"] = (
+            decode["paged"]["kv_bytes_peak"]
+            / max(decode["contiguous"]["kv_bytes_peak"], 1))
+
         result[mode] = {
             "train_s": train_s,
             "train_tokens_per_s": batch * seq / train_s,
             "prefill_s": prefill_s,
             "prefill_tokens_per_s": batch * seq / prefill_s,
-            "decode_s": decode_s,
-            "decode_tokens_per_s": generated / decode_s,
-            "ttft_s": float(np.mean([r.ttft_s for r in reqs])),
-            "decode_dispatches": engine.metrics["dispatches"],
+            # Headline decode numbers come from the engine default (paged).
+            "decode_s": decode["paged"]["decode_s"],
+            "decode_tokens_per_s": decode["paged"]["decode_tokens_per_s"],
+            "ttft_s": decode["paged"]["ttft_s"],
+            "decode_dispatches": decode["paged"]["dispatches"],
+            "decode": decode,
         }
+        if mode == "fused":
+            result[mode]["interpret_mode"] = interpret_default()
+            if interpret_default():
+                result[mode]["note"] = (
+                    "Pallas kernels ran in interpret mode (no TPU): "
+                    "fused-slower-than-eager here is interpreter tax, "
+                    "not a kernel regression.")
     result["loss_abs_diff"] = abs(losses["eager"] - losses["fused"])
     result["fused_over_eager_train"] = (result["fused"]["train_s"]
                                         / result["eager"]["train_s"])
@@ -125,10 +163,13 @@ def main(argv=None) -> int:
         r["bench_seconds"] = time.perf_counter() - t0
         report["configs"].append(r)
         e, f = r["eager"], r["fused"]
+        dc = e["decode"]
         print(f"{r['arch']}: train {e['train_s']*1e3:.1f}ms eager / "
               f"{f['train_s']*1e3:.1f}ms fused | decode "
               f"{e['decode_tokens_per_s']:.1f} vs "
               f"{f['decode_tokens_per_s']:.1f} tok/s | "
+              f"kv peak {dc['paged']['kv_bytes_peak']} paged / "
+              f"{dc['contiguous']['kv_bytes_peak']} contiguous bytes | "
               f"loss diff {r['loss_abs_diff']:.2e}", flush=True)
 
     with open(args.out, "w") as fh:

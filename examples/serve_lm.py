@@ -1,6 +1,7 @@
 """Serving example: batched requests through the continuous-batching engine
-(prefill -> slot caches -> one jitted decode step per tick), reporting the
-paper's metrics (TTFT, decode tok/s) per request.
+(per-request prefill into the paged KV cache -> block decode across slots,
+requests joining as slots free), reporting the paper's metrics (TTFT,
+decode tok/s) per request.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-2.7b]
 """

@@ -17,9 +17,14 @@ Stage mapping (DESIGN.md §StreamPlan):
     the norm is RMSNorm; plain ``block_matmul`` when only the projections
     fused; eager otherwise.
   * ``attention`` — the composite attention op.  ``flash_attention`` when
-    its group lowered to a Pallas-backed pattern (full-sequence only; the
-    single-token decode attention stays on the XLA path — its grid would be
-    degenerate at Sq=1).
+    its group lowered to a Pallas-backed pattern (full-sequence; a flash
+    grid is degenerate at Sq=1).
+  * ``decode_attn`` — single-token attention against the paged KV cache.
+    ``paged_attention`` (kernels/paged_attention.py: K/V pages streamed
+    through the page-table indirection with an online softmax) whenever
+    the attention group lowered to a Pallas pattern; its page size is the
+    *raw* DSE tile of the attention op's KV dim — pages are HBM streaming
+    granules, not MXU operands, so the 128-lane floor does not apply.
   * ``ffn``       — ln2 + MLP.  ``streamed_ffn`` (gated) / ``streamed_mlp``
     (ungated) / ``moe_experts``; the norm is folded into the kernel when
     fusion grouped it with the projections and the norm is RMSNorm.
@@ -81,13 +86,15 @@ class LayerPlan:
     kind: str
     qkv: KernelChoice = EAGER        # ln1 + Q/K/V projections
     attention: KernelChoice = EAGER  # full-sequence attention
+    decode_attn: KernelChoice = EAGER  # single-token paged attention
     ffn: KernelChoice = EAGER        # ln2 + MLP / MoE
     mixer: KernelChoice = EAGER      # ssm_scan / wkv composite
 
     @property
     def any_fused(self) -> bool:
         return any(c.fused for c in
-                   (self.qkv, self.attention, self.ffn, self.mixer))
+                   (self.qkv, self.attention, self.decode_attn, self.ffn,
+                    self.mixer))
 
 
 @dataclass(frozen=True)
@@ -111,6 +118,16 @@ class StreamPlan:
                 return lp
         return LayerPlan(kind=kind)
 
+    def decode_page_size(self, default: int = 16) -> int:
+        """KV page size the paged decode cache should use — the DSE tile
+        the plan's paged-attention choice carries (the stream granularity
+        the compiler chose for the KV dim), or ``default`` when no layer
+        plans a paged decode stage."""
+        for _, lp in self.layers:
+            if lp.decode_attn.fused:
+                return lp.decode_attn.kw.get("page_size", default)
+        return default
+
     def summary(self) -> Dict[str, object]:
         return {
             "arch": self.arch,
@@ -123,6 +140,7 @@ class StreamPlan:
             "stages": {
                 kind: {"qkv": lp.qkv.implementation,
                        "attention": lp.attention.implementation,
+                       "decode_attn": lp.decode_attn.implementation,
                        "ffn": lp.ffn.implementation,
                        "mixer": lp.mixer.implementation}
                 for kind, lp in self.layers
@@ -147,6 +165,17 @@ def _tile(graph: DataflowGraph, kernel: str, dim: str,
     except KeyError:
         return default
     return _pallas_block(dec.tile_sizes.get(dim, default))
+
+
+def _raw_tile(graph: DataflowGraph, kernel: str, dim: str,
+              default: int = 16) -> int:
+    """DSE tile WITHOUT the 128-lane Pallas floor — for quantities that
+    are streaming granules rather than MXU block operands (KV page size)."""
+    try:
+        dec = graph.kernel(kernel).tags["decision"]
+    except KeyError:
+        return default
+    return int(dec.tile_sizes.get(dim, default))
 
 
 def _group_impl(compiled: CompiledDataflow, kernel: str) -> str:
@@ -179,7 +208,7 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
     def fused_at(anchor: str) -> bool:
         return _group_impl(compiled, anchor) != "xla_fusion"
 
-    qkv = attention = ffn = mixer = EAGER
+    qkv = attention = decode_attn = ffn = mixer = EAGER
 
     if kind in ("attn", "local_attn", "global_attn", "mamba+shared_attn"):
         ab = f"{base}.shared" if kind == "mamba+shared_attn" else base
@@ -198,6 +227,12 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
             attention = KernelChoice("flash_attention", (
                 ("block_q", _tile(g, f"{ab}.attention", "t")),
                 ("block_kv", _tile(g, f"{ab}.attention", "s")),
+            ))
+            # Decode twin of the same fusion decision: single-token
+            # attention streams the paged KV cache instead of a flash
+            # grid; the KV-dim DSE tile becomes the page size.
+            decode_attn = KernelChoice("paged_attention", (
+                ("page_size", _raw_tile(g, f"{ab}.attention", "s")),
             ))
         mb = f"{ab}.moe" if cfg.is_moe else f"{ab}.mlp"
         if cfg.is_moe and cfg.gated_ffn and fused_at(f"{mb}.experts"):
@@ -226,8 +261,8 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
                 ("chunk", min(64, _tile(g, f"{base}.wkv", "t"))),
             ))
 
-    return LayerPlan(kind=kind, qkv=qkv, attention=attention, ffn=ffn,
-                     mixer=mixer)
+    return LayerPlan(kind=kind, qkv=qkv, attention=attention,
+                     decode_attn=decode_attn, ffn=ffn, mixer=mixer)
 
 
 def build_stream_plan(cfg: ModelConfig, *, tokens: int,

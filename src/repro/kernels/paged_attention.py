@@ -1,0 +1,159 @@
+"""Paged decode attention Pallas kernel — K/V pages streamed by indirection.
+
+Single-token decode attention over the paged KV cache
+(``serving/kv_cache.py``): one query token per slot attends to that slot's
+pages through the page table.  This closes the last eager stage in the
+decode hot loop (ROADMAP "Fused decode attention") with the paper's
+streaming pattern: each K/V page is DMA'd into VMEM, its score tile is
+produced, folded into the online-softmax running (m, l, acc), and
+discarded — the per-slot score row never materializes in HBM.
+
+Grid: ``(slots, kv_heads, n_pages)`` with the page dimension as the
+sequential inner loop carrying the accumulators in VMEM scratch.  The page
+table and per-slot lengths ride in as *scalar-prefetch* operands
+(``PrefetchScalarGridSpec``) so the K/V BlockSpec index maps are
+data-dependent: program (b, h, j) fetches physical page ``table[b, j]`` —
+the explicit data-movement-by-indirection that PowerFusion's IR spells out
+and that a dense BlockSpec cannot express.  GQA falls out of the grid: the
+``G = Hq // Hkv`` query heads sharing a KV head live in one block, so K/V
+pages are fetched once per kv head (the head dim is a reuse dim of the
+page stream).
+
+Pages fully past a slot's length are skipped with ``pl.when`` (no MXU
+work, though the page DMA itself is still issued by the pipeline);
+unallocated table entries point at the NULL page so the indirection is
+always in bounds.  Per-slot length (and optional sliding-window) masking
+is applied per element inside the page.  Interpret-mode fallback on CPU,
+same as every kernel in this package.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import LANE, interpret_default, round_up
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page_size: int,
+                         n_pages: int, scale: float, window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    page_start = j * page_size
+    # Page-level skip: pages at/after the slot's length hold no valid
+    # entries; with a sliding window, pages wholly before the window are
+    # dead too.  Skipped pages issue no MXU work.
+    run = page_start < length
+    if window:
+        run = jnp.logical_and(run, page_start + page_size > length - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [ps, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [G, ps]
+        g = s.shape[0]
+        kv_pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1)
+        mask = kv_pos < length
+        if window:
+            mask = jnp.logical_and(mask, kv_pos >= length - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # [ps, D]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *, window: int = 0,
+                           scale: Optional[float] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """One-token attention against paged K/V pools.
+
+    q: [B, 1, Hq, D]; k_pool/v_pool: [P, page_size, Hkv, D] (page-major
+    canonical layout from ``serving/kv_cache.py``); page_table:
+    [B, max_pages] int32 physical page ids (NULL page for unallocated
+    entries); lengths: [B] valid entries per slot (including the token
+    appended this step).  Returns [B, 1, Hq, D].
+
+    A slot with length 0 (inactive) produces zeros — its output is
+    discarded by the engine.
+    """
+    b, _, hq, d = q.shape
+    _, page_size, hkv, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    interpret = interpret_default() if interpret is None else interpret
+    dp = d if interpret else round_up(d, LANE)
+    if dp != d:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, dp - d)))
+        k_pool = jnp.pad(k_pool, ((0, 0), (0, 0), (0, 0), (0, dp - d)))
+        v_pool = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, dp - d)))
+    # [B, 1, Hq, D] -> [B, Hkv, G, D]: kv-head-major so program (b, h)
+    # holds the G query heads that share KV head h.
+    qk = q.reshape(b, hkv, g, dp)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # lengths, page_table
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dp),
+                         lambda bi, hi, ji, lens, tbl: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dp),
+                         lambda bi, hi, ji, lens, tbl:
+                         (tbl[bi, ji], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1, dp),
+                         lambda bi, hi, ji, lens, tbl:
+                         (tbl[bi, ji], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dp),
+                               lambda bi, hi, ji, lens, tbl: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dp), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel, page_size=page_size, n_pages=n_pages,
+            scale=scale, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dp), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32),
+      qk, k_pool, v_pool)
+    return out.reshape(b, 1, hq, dp)[..., :d]

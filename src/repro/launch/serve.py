@@ -27,6 +27,11 @@ def main(argv=None) -> int:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--contiguous", action="store_true",
+                    help="contiguous slots*max_len KV cache instead of "
+                         "the paged default")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size (default: StreamPlan tile / 16)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,7 +41,9 @@ def main(argv=None) -> int:
         ap.error(f"{args.arch} is encoder-only: no decode step")
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(cfg, params, batch_slots=args.slots,
-                           max_len=args.prompt_len + args.new_tokens + 8)
+                           max_len=args.prompt_len + args.new_tokens + 8,
+                           paged=not args.contiguous,
+                           page_size=args.page_size)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(1, cfg.vocab_size, args.prompt_len,
                             dtype=np.int32)
@@ -46,8 +53,12 @@ def main(argv=None) -> int:
     dt = time.perf_counter() - t0
     total = sum(len(r.out_tokens) for r in reqs)
     ttft = np.mean([r.ttft_s for r in reqs])
+    m = engine.metrics
     print(f"[serve] {len(reqs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s), mean TTFT {ttft*1e3:.1f}ms")
+    print(f"[serve] kv cache: {'paged' if m['paged'] else 'contiguous'}, "
+          f"peak {m['kv_bytes_peak']} / reserved {m['kv_bytes_reserved']} "
+          f"bytes, block efficiency {m['ticks']}/{m['scan_ticks']} ticks")
     for r in reqs[:2]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
     return 0

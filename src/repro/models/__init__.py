@@ -2,14 +2,17 @@
 
 from .model import (decode_step, forward_hidden, forward_train, prefill,
                     resolve_plan, streamed_xent)
-from .params import (abstract_cache, abstract_params, cache_defs,
-                     cache_logical_axes, init_cache, init_params,
-                     logical_axes, model_defs, padded_vocab, param_bytes)
+from .params import (KV_CACHE_LEAVES, STATE_CACHE_LEAVES, abstract_cache,
+                     abstract_params, cache_defs, cache_leaf_kind,
+                     cache_leaf_name, cache_logical_axes, init_cache,
+                     init_params, kv_seq_axis, logical_axes, model_defs,
+                     padded_vocab, param_bytes)
 
 __all__ = [
     "decode_step", "forward_hidden", "forward_train", "prefill",
     "resolve_plan", "streamed_xent",
-    "abstract_cache", "abstract_params", "cache_defs",
-    "cache_logical_axes", "init_cache", "init_params", "logical_axes",
-    "model_defs", "padded_vocab", "param_bytes",
+    "KV_CACHE_LEAVES", "STATE_CACHE_LEAVES", "abstract_cache",
+    "abstract_params", "cache_defs", "cache_leaf_kind", "cache_leaf_name",
+    "cache_logical_axes", "init_cache", "init_params", "kv_seq_axis",
+    "logical_axes", "model_defs", "padded_vocab", "param_bytes",
 ]

@@ -252,12 +252,13 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             valid, pos[None] >= jnp.reshape(cache_len, (-1, 1)) - window)
     scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
-    if layout == "bhsd":
-        out = jnp.einsum(f"bhgqs,{k_eq}->bqhgd", p.astype(v_cache.dtype),
-                         v_cache)
-    else:
-        out = jnp.einsum(f"bhgqs,{k_eq}->bqhgd", p.astype(v_cache.dtype),
-                         v_cache, preferred_element_type=jnp.float32)
+    # PV stays in f32 (p uncast; the cache promotes): the paged decode
+    # kernel folds pages through the same f32 online softmax, and the
+    # plan-selectable paged path is required to match this one to 1e-5 —
+    # a bf16 downcast of p here would round at a different scale than the
+    # kernel's running (m, l) and break that contract.
+    out = jnp.einsum(f"bhgqs,{k_eq}->bqhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
     return out.reshape(b, 1, hq, d).astype(q.dtype)
 
 

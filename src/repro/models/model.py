@@ -54,18 +54,22 @@ def _lplan(plan: Optional[Plan], kind: str) -> Optional[LPlan]:
     return plan.layer(kind) if plan is not None else None
 
 
-def _cache_kv_len(cfg: ModelConfig, cache: Tree) -> Optional[int]:
+def _cache_kv_len(cfg: ModelConfig, cache: Tree,
+                  page_table: Optional[jax.Array] = None) -> Optional[int]:
     """Max KV length held by a decode cache (None for pure SSM caches).
 
     Stacked K leaves are [G, B, S, Hkv, hd] ("bshd") or [G, B, Hkv, S, hd]
-    ("bhsd"); used so the decode plan's DSE models attention over the real
-    cache extent rather than the (tiny) per-step token count.
+    ("bhsd"); paged K leaves are pools [G, P, page_size, Hkv, hd] and the
+    extent is the page table's ``max_pages * page_size``.  Used so the
+    decode plan's DSE models attention over the real cache extent rather
+    than the (tiny) per-step token count.
     """
-    axis = 3 if cfg.kv_cache_layout == "bhsd" else 2
+    from .params import cache_leaf_kind, cache_leaf_name, kv_seq_axis
     for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        if name == "k":
-            return int(leaf.shape[axis])
+        if cache_leaf_kind(cache_leaf_name(path)) == "kv":
+            if page_table is not None:
+                return int(page_table.shape[1]) * int(leaf.shape[2])
+            return int(leaf.shape[kv_seq_axis(cfg.kv_cache_layout)])
     return None
 
 
@@ -483,26 +487,40 @@ def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
 # Decode
 # --------------------------------------------------------------------- #
 
+def _decode_positions(cache_pos: jax.Array, b: int) -> jax.Array:
+    """Normalize a decode write position (scalar or [B]) to a [B] vector —
+    per-slot positions are what continuous batching runs on; the scalar
+    form is the degenerate all-slots-aligned case."""
+    return jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(cache_pos, jnp.int32), (-1,)), (b,))
+
+
 def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
                        cache: Tree, cache_pos: jax.Array,
                        lengths: jax.Array, *, window: int = 0,
                        lplan: Optional[LPlan] = None,
+                       page_table: Optional[jax.Array] = None,
                        ) -> Tuple[jax.Array, Tree]:
-    """x: [B,1,D]; cache: {"k","v"} [B,Smax,Hkv,hd].
+    """x: [B,1,D]; cache: {"k","v"} [B,Smax,Hkv,hd] contiguous, or paged
+    pools [P,page_size,Hkv,hd] when ``page_table`` ([B,max_pages]) is set.
 
-    The fused plan covers the projections and the FFN; single-token
-    attention itself stays on the XLA path (``decode_attention``) — a
-    flash grid is degenerate at Sq=1 and the reduction is memory-bound.
+    ``cache_pos`` may be a scalar or a per-slot [B] vector.  With a page
+    table the token is scattered through the slot's page indirection and
+    attention runs either through the ``paged_attention`` Pallas kernel
+    (when the plan selected it) or the gather-pages reference path; the
+    contiguous path scatters per slot at its own offset.  The plan's
+    flash kernel is never used here — its grid is degenerate at Sq=1.
     """
     b = x.shape[0]
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    layout = cfg.kv_cache_layout
     ap = p["attn"]
     q, k, v = _project_qkv(cfg, ap, x, p["ln1"], lplan)
     q = q.reshape(b, 1, hq, hd)
     k = k.reshape(b, 1, hkv, hd)
     v = v.reshape(b, 1, hkv, hd)
     q, k = _qk_normed(cfg, ap, q, k)
-    pos = jnp.broadcast_to(jnp.reshape(cache_pos, (1, 1)), (b, 1))
+    pos = _decode_positions(cache_pos, b)[:, None]          # [B, 1]
     if cfg.rope == "mrope":
         pos3 = jnp.broadcast_to(pos[None], (3, b, 1))
         q = L.apply_positional(cfg.rope, q, pos3, cfg.rope_theta)
@@ -510,20 +528,47 @@ def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
     else:
         q = L.apply_positional(cfg.rope, q, pos, cfg.rope_theta)
         k = L.apply_positional(cfg.rope, k, pos, cfg.rope_theta)
-    if cfg.kv_cache_layout == "bhsd":
-        kc = lax.dynamic_update_slice_in_dim(
-            cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
-            cache_pos, axis=2)
-        vc = lax.dynamic_update_slice_in_dim(
-            cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
-            cache_pos, axis=2)
+    k_new = k.transpose(0, 2, 1, 3) if layout == "bhsd" else k
+    v_new = v.transpose(0, 2, 1, 3) if layout == "bhsd" else v
+    if page_table is not None:
+        # Deliberately deferred: serving imports models at module load, so
+        # this back edge to the paged-cache primitives must stay
+        # function-local (hoisting it is a circular import).  The
+        # primitives are pure array ops; they live in serving because
+        # that's where the page allocator that owns their layout lives.
+        from ..serving.kv_cache import gather_pages, paged_append
+        pos_v = pos[:, 0]
+        kc = paged_append(cache["k"], page_table, pos_v, k_new,
+                          layout=layout)
+        vc = paged_append(cache["v"], page_table, pos_v, v_new,
+                          layout=layout)
+        choice = lplan.decode_attn if lplan is not None else None
+        if choice is not None and choice.fused:
+            from ..kernels import paged_decode_attention
+            o = paged_decode_attention(q, kc, vc, page_table, lengths + 1,
+                                       window=window)
+        else:
+            o = L.decode_attention(
+                q, gather_pages(kc, page_table, layout=layout),
+                gather_pages(vc, page_table, layout=layout),
+                lengths + 1, window=window, layout=layout)
     else:
-        kc = lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
-        vc = lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
-    o = L.decode_attention(q, kc, vc, lengths + 1, window=window,
-                           layout=cfg.kv_cache_layout)
+        from .params import kv_seq_axis
+        ax = kv_seq_axis(layout)
+        seq_len = cache["k"].shape[ax]
+        # Per-slot scatter (a slot at capacity rewrites its final row; the
+        # engine retires it there), vmapped so each slot writes its own
+        # offset — the wave-shared scalar position is just the aligned case.
+        pos_w = jnp.minimum(pos[:, 0], seq_len - 1)
+
+        def upd(c, new, p_):
+            return lax.dynamic_update_slice_in_dim(
+                c, new.astype(c.dtype), p_, axis=ax)
+
+        kc = jax.vmap(upd)(cache["k"], k_new, pos_w)
+        vc = jax.vmap(upd)(cache["v"], v_new, pos_w)
+        o = L.decode_attention(q, kc, vc, lengths + 1, window=window,
+                               layout=layout)
     x = x + o.reshape(b, 1, hq * hd) @ ap["wo"]
     x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
     return x, {"k": kc, "v": vc}
@@ -596,7 +641,9 @@ def _rwkv_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
 def _apply_block_decode(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
                         x: jax.Array, cache: Tree, cache_pos: jax.Array,
                         lengths: jax.Array,
-                        lplan: Optional[LPlan] = None) -> Tuple[jax.Array, Tree]:
+                        lplan: Optional[LPlan] = None,
+                        page_table: Optional[jax.Array] = None,
+                        ) -> Tuple[jax.Array, Tree]:
     if kind == "rwkv":
         return _rwkv_block_decode(cfg, p, x, cache)
     if kind == "mamba":
@@ -606,30 +653,39 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
         attn_cache = {"k": cache["k"], "v": cache["v"]}
         x, nm = _mamba_block_decode(cfg, p, x, mamba_cache)
         x, na = _attn_block_decode(cfg, shared, x, attn_cache, cache_pos,
-                                   lengths, lplan=lplan)
+                                   lengths, lplan=lplan,
+                                   page_table=page_table)
         return x, {**nm, **na}
     window = cfg.sliding_window if kind == "local_attn" else 0
     return _attn_block_decode(cfg, p, x, cache, cache_pos, lengths,
-                              window=window, lplan=lplan)
+                              window=window, lplan=lplan,
+                              page_table=page_table)
 
 
 def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
                 cache: Tree, cache_pos: jax.Array, lengths: jax.Array, *,
+                page_table: Optional[jax.Array] = None,
                 plan: Optional[Plan] = None,
                 ) -> Tuple[jax.Array, jax.Array, Tree]:
     """One decoding step.
 
-    tokens: [B,1] int32; cache: pytree from ``init_cache``/``prefill``;
-    cache_pos: scalar int32 write position; lengths: [B] valid lengths.
+    tokens: [B,1] int32; cache: pytree from ``init_cache``/``prefill`` (or
+    paged pools from ``serving.kv_cache`` when ``page_table`` is given);
+    cache_pos: int32 write position, scalar or per-slot [B]; lengths: [B]
+    valid lengths; page_table: [B, max_pages] int32 page indirection.
     Returns (next_tokens [B,1], logits [B,1,Vp], new_cache).
     """
     params = _cast_tree(cfg, params)
+    b = tokens.shape[0]
+    pos_v = _decode_positions(cache_pos, b)
     x = _c(cfg, jnp.take(params["embed"], tokens, axis=0))
     x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
     if cfg.rope == "none" and "pos_embed" in params:
-        x = x + _c(cfg, params["pos_embed"])[cache_pos][None, None]
-    plan = resolve_plan(cfg, tokens.shape[0],
-                        kv_len=_cache_kv_len(cfg, cache), plan=plan)
+        x = x + jnp.take(_c(cfg, params["pos_embed"]), pos_v,
+                         axis=0)[:, None]
+    plan = resolve_plan(cfg, b,
+                        kv_len=_cache_kv_len(cfg, cache, page_table),
+                        plan=plan)
     period = len(cfg.layer_pattern)
     groups = cfg.num_layers // period
     shared = params.get("shared")
@@ -640,8 +696,9 @@ def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
         for pidx in range(period):
             kind = cfg.layer_pattern[pidx]
             x, nc = _apply_block_decode(cfg, kind, block_params[pidx],
-                                        shared, x, cache_g[pidx], cache_pos,
-                                        lengths, lplan=_lplan(plan, kind))
+                                        shared, x, cache_g[pidx], pos_v,
+                                        lengths, lplan=_lplan(plan, kind),
+                                        page_table=page_table)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -655,8 +712,9 @@ def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
         kind = cfg.layer_kind(groups * period + i)
         c_i = jax.tree.map(lambda a: a[0], cache["rest"][i])
         x, nc = _apply_block_decode(cfg, kind, bp, shared, x, c_i,
-                                    cache_pos, lengths,
-                                    lplan=_lplan(plan, kind))
+                                    pos_v, lengths,
+                                    lplan=_lplan(plan, kind),
+                                    page_table=page_table)
         new_rest.append(jax.tree.map(lambda a: a[None], nc))
     x = L.apply_norm(cfg.norm, x, params["final_norm"])
     logits = (x @ _c(cfg, params["lm_head"])).astype(jnp.float32)

@@ -278,6 +278,40 @@ def param_bytes(cfg: ModelConfig) -> int:
 # Decode caches
 # --------------------------------------------------------------------- #
 
+# Cache-leaf schema — the single source of truth for what each decode-cache
+# leaf *is*.  Everything that walks a cache pytree (the serving engine's
+# placement, the paged KV cache, the model's kv-length probe) classifies
+# leaves through ``cache_leaf_kind`` instead of re-matching names ad hoc, so
+# a new state leaf that is added here is handled everywhere — and a leaf
+# that is NOT registered raises instead of being silently whole-replaced.
+KV_CACHE_LEAVES = ("k", "v")                       # carry a sequence axis
+STATE_CACHE_LEAVES = ("ssm", "conv", "wkv",        # slot-contiguous state
+                      "tm_shift", "cm_shift")
+
+
+def cache_leaf_name(path) -> str:
+    """Leaf name from a ``tree_map_with_path`` key path."""
+    last = path[-1]
+    return last.key if hasattr(last, "key") else str(last)
+
+
+def cache_leaf_kind(name: str) -> str:
+    """'kv' (paged / sequence-carrying) or 'state' (slot-contiguous)."""
+    if name in KV_CACHE_LEAVES:
+        return "kv"
+    if name in STATE_CACHE_LEAVES:
+        return "state"
+    raise ValueError(
+        f"unregistered cache leaf {name!r}: add it to KV_CACHE_LEAVES or "
+        "STATE_CACHE_LEAVES in models/params.py")
+
+
+def kv_seq_axis(layout: str) -> int:
+    """Sequence axis of a K/V cache leaf, counted from the END so the same
+    value is correct at every stacking level ([G,B,...], [B,...], [...])."""
+    return -2 if layout == "bhsd" else -3
+
+
 @dataclass(frozen=True)
 class CacheDef:
     shape: Tuple[int, ...]

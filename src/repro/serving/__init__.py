@@ -1,3 +1,5 @@
-"""Serving runtime: batched prefill/decode engine."""
+"""Serving runtime: continuous-batching engine over a paged KV cache."""
 from .engine import Request, ServingEngine
-__all__ = ["Request", "ServingEngine"]
+from .kv_cache import PagedKVCache, gather_pages, paged_append, place_prefill
+__all__ = ["Request", "ServingEngine", "PagedKVCache", "gather_pages",
+           "paged_append", "place_prefill"]

@@ -1,38 +1,46 @@
-"""Serving engine: prefill + batched greedy decode with slot management.
+"""Serving engine: continuous batching over a paged KV cache.
 
-A deliberately small continuous-batching engine (the serving twin of the
-trainer): requests enter a queue, get assigned cache slots, prefill fills a
-slot's KV/state, and jitted decode dispatches advance every active slot.
-Works on CPU for the examples/tests and under any mesh for a real
-deployment (the decode step is the dry-run's serve_step).
+Requests enter a queue and are admitted to cache slots *individually*, the
+moment a slot frees up — there is no wave barrier.  Each slot carries its
+own write position, so a request prefilled at length 11 decodes next to
+one at length 300 inside the same jitted dispatch, and a request that
+finishes mid-stream hands its slot (and its KV pages) to the next pending
+request while the others keep decoding.
 
-Decode fast path (§Perf, this is the hot loop):
+Decode hot loop (§Perf):
 
-  * The slot cache is allocated ONCE at ``max_len`` (``init_cache``) and
-    prefill results are *placed into it* inside the prefill jit via
-    ``dynamic_update_slice`` — the old per-wave host-side
-    ``_pad_cache_seq`` materialized a fresh full-size padded copy of every
-    K/V buffer per wave.  Stale K/V beyond the prompt length is never read:
-    decode attention masks strictly by per-slot ``lengths``.
-  * The cache is DONATED through both the placement and decode dispatches
-    (``donate_argnums``), so XLA updates the K/V buffers in place instead
-    of copying the whole cache every step.
-  * Decode runs ``decode_block`` (>= 8) ticks per jitted dispatch as a
-    ``lax.scan`` over ``decode_step`` — one host round-trip per block of
-    tokens instead of per token.  The scan always runs the full block
-    (single compiled program); host-side bookkeeping discards tokens past a
-    request's budget or ``max_len`` (writes past ``max_len`` clamp into the
-    final cache rows, which is safe: the wave terminates there and the
-    cache is re-placed at the next prefill).
+  * The KV cache is PAGED (``kv_cache.PagedKVCache``): fixed-size pages,
+    a ``[slots, max_pages]`` device page table, host-side free-list
+    allocation.  Bytes-in-use is ``pages_used * page_bytes`` instead of
+    the contiguous ``slots * max_len`` worst case; pages are allocated
+    just ahead of each decode block and returned the moment a request
+    retires.  ``paged=False`` keeps the PR-1 contiguous slot cache (same
+    continuous scheduler) for A/B benchmarking.
+  * Decode attention streams K/V pages through the page-table indirection
+    in the ``paged_attention`` Pallas kernel when the StreamPlan selects
+    it (``use_fused_kernels``); eager configs run the gather-pages
+    reference path.  Either way the math bit-matches the contiguous
+    eager decode.
+  * The cache is DONATED through prefill placement and decode dispatches,
+    so K/V updates happen in place; decode runs ``decode_block`` ticks
+    per jitted dispatch as a ``lax.scan`` over ``decode_step`` with
+    per-slot position/length vectors.
+  * Prefill is per-request (batch 1) at the request's own length and is
+    placed at the slot's own offset — no same-length-wave assumption.
+    Inactive slots ride along in decode dispatches writing into the NULL
+    page (paged) or their own masked rows (contiguous); their outputs are
+    discarded on the host.
 
-All sequences in a tick share the write position (static-shape decode);
-per-slot lengths mask attention.  Tail waves are padded to the slot count
-with a dummy prompt so every dispatch reuses the same compiled program.
+Metrics count REAL work: ``generated`` is tokens actually delivered to
+requests (padding slots and past-budget scan ticks excluded), ``ticks``
+is the per-dispatch maximum of useful ticks, and ``scan_ticks`` is what
+the hardware executed — their ratio is the block-decode efficiency.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -42,7 +50,9 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig
-from ..models import decode_step, init_cache, prefill
+from ..models import decode_step, init_cache, prefill, resolve_plan
+from ..models.params import cache_leaf_kind, cache_leaf_name
+from .kv_cache import PagedKVCache, place_prefill
 
 Tree = Any
 
@@ -67,130 +77,219 @@ class Request:
         return self.finished_at - self.submitted_at
 
 
-def _seq_axis(path, layout: str) -> Optional[int]:
-    """Sequence axis of a stacked K/V cache leaf, None for non-KV leaves.
+def _place_cache_slot(cache: Tree, fresh: Tree, slot: jax.Array) -> Tree:
+    """Write a batch-1 prefill cache into one slot of the contiguous cache.
 
-    Leaves carry a leading layer-group axis: [G, B, S, Hkv, hd] ("bshd")
-    or [G, B, Hkv, S, hd] ("bhsd").
-    """
-    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-    if name not in ("k", "v"):
-        return None
-    return 3 if layout == "bhsd" else 2
-
-
-def _place_cache(cache: Tree, fresh: Tree, layout: str) -> Tree:
-    """Write prompt-length prefill caches into the max-length slot cache.
-
-    K/V leaves are placed at sequence offset 0 of the preallocated buffer
-    (an in-place ``dynamic_update_slice`` under donation); state leaves
-    (SSM / conv / wkv / shifts) carry no sequence axis and replace the slot
-    buffer wholesale.
+    Every leaf places at ``(0, slot, 0, ...)``: K/V leaves fill the slot's
+    sequence prefix (an in-place ``dynamic_update_slice`` under donation),
+    state leaves replace the slot row.  Leaf classification goes through
+    the shared schema — an unregistered leaf raises instead of being
+    silently whole-replaced.
     """
     def place(path, big, small):
-        ax = _seq_axis(path, layout)
-        if ax is None:
-            return small.astype(big.dtype)
-        return lax.dynamic_update_slice_in_dim(
-            big, small.astype(big.dtype), 0, axis=ax)
+        cache_leaf_kind(cache_leaf_name(path))      # validate: kv or state
+        start = (jnp.int32(0), slot) + (jnp.int32(0),) * (big.ndim - 2)
+        return lax.dynamic_update_slice(big, small.astype(big.dtype), start)
     return jax.tree_util.tree_map_with_path(place, cache, fresh)
 
 
 class ServingEngine:
-    """Batched greedy generation over a fixed slot count."""
+    """Continuously-batched greedy generation over a fixed slot count."""
 
     def __init__(self, cfg: ModelConfig, params: Tree, *,
                  batch_slots: int = 4, max_len: int = 256,
-                 decode_block: int = 16):
+                 decode_block: int = 16, paged: bool = True,
+                 page_size: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.decode_block = max(1, decode_block)
+        self.paged = paged
 
-        def _prefill_into(p, batch, slot_cache):
-            logits, fresh = prefill(p, cfg, batch)
-            placed = _place_cache(slot_cache, fresh, cfg.kv_cache_layout)
-            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return next_tok, placed
+        if page_size is None:
+            # Page size = the StreamPlan's KV stream granule (the raw DSE
+            # tile its paged-attention choice carries); 16 when eager.
+            plan = resolve_plan(cfg, batch_slots, kv_len=max_len)
+            page_size = (plan.decode_page_size(16) if plan is not None
+                         else 16)
 
-        def _decode_n(p, tok, cache, pos, lengths):
-            def tick(carry, _):
-                tok, cache, pos, lengths = carry
-                nt, _logits, cache = decode_step(p, cfg, tok, cache, pos,
+        if paged:
+            self.kv: Optional[PagedKVCache] = PagedKVCache(
+                cfg, slots=batch_slots, max_len=max_len,
+                page_size=page_size)
+            self._slot_cache = self.kv.init_cache()
+
+            def _prefill_into(p, batch, slot_cache, slot, pages):
+                logits, fresh = prefill(p, cfg, batch)
+                placed = place_prefill(slot_cache, fresh, slot, pages,
+                                       layout=cfg.kv_cache_layout)
+                return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                        placed)
+
+            def _decode_n(p, tok, cache, table, pos, lengths):
+                def tick(carry, _):
+                    tok, cache, pos, lengths = carry
+                    nt, _lg, cache = decode_step(p, cfg, tok, cache, pos,
+                                                 lengths, page_table=table)
+                    return (nt, cache, pos + 1, lengths + 1), nt[:, 0]
+
+                carry, toks = lax.scan(tick, (tok, cache, pos, lengths),
+                                       None, length=self.decode_block)
+                return carry[0], carry[1], toks          # toks: [N, B]
+        else:
+            self.kv = None
+            self._slot_cache = init_cache(cfg, batch_slots, max_len)
+
+            def _prefill_into(p, batch, slot_cache, slot):
+                logits, fresh = prefill(p, cfg, batch)
+                placed = _place_cache_slot(slot_cache, fresh, slot)
+                return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                        placed)
+
+            def _decode_n(p, tok, cache, pos, lengths):
+                def tick(carry, _):
+                    tok, cache, pos, lengths = carry
+                    nt, _lg, cache = decode_step(p, cfg, tok, cache, pos,
                                                  lengths)
-                return (nt, cache, pos + 1, lengths + 1), nt[:, 0]
+                    return (nt, cache, pos + 1, lengths + 1), nt[:, 0]
 
-            carry, toks = lax.scan(
-                tick, (tok, cache, pos, lengths), None,
-                length=self.decode_block)
-            tok, cache, pos, lengths = carry
-            return tok, cache, pos, lengths, toks      # toks: [N, B]
+                carry, toks = lax.scan(tick, (tok, cache, pos, lengths),
+                                       None, length=self.decode_block)
+                return carry[0], carry[1], toks
 
-        # Donate the slot cache through both dispatches: K/V updates happen
-        # in place instead of copying the max_len buffers every call.
+        # Donate the slot cache through both dispatches: K/V page scatters
+        # and state-row updates happen in place, not as full-pool copies.
         self._prefill = jax.jit(_prefill_into, donate_argnums=(2,))
         self._decode = jax.jit(_decode_n, donate_argnums=(2,))
-        self._slot_cache = init_cache(cfg, batch_slots, max_len)
+
+        # Reserved K/V bytes: pool size (paged) / worst-case slot rows
+        # (contiguous) — the paged win is measured against bytes-IN-USE.
+        self.kv_bytes_reserved = sum(
+            leaf.nbytes for path, leaf in
+            jax.tree_util.tree_flatten_with_path(self._slot_cache)[0]
+            if cache_leaf_kind(cache_leaf_name(path)) == "kv")
         self.metrics: Dict[str, float] = {
-            "ticks": 0, "generated": 0, "dispatches": 0,
-            "decode_block": self.decode_block,
+            "dispatches": 0, "ticks": 0, "scan_ticks": 0, "generated": 0,
+            "prefills": 0, "decode_block": self.decode_block,
+            "paged": int(paged),
+            "page_size": self.kv.page_size if self.kv else 0,
+            "kv_bytes_reserved": self.kv_bytes_reserved,
+            "kv_bytes_peak": 0,
         }
 
     # -------------------------------------------------------------- API
     def generate(self, prompts: List[np.ndarray],
                  max_new_tokens: int = 16) -> List[Request]:
-        """Serve a list of same-length prompts with continuous batching."""
-        reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new_tokens,
+        """Serve a list of prompts (any mix of lengths) to completion."""
+        reqs = [Request(rid=i, prompt=np.asarray(p),
+                        max_new_tokens=max_new_tokens,
                         submitted_at=time.perf_counter())
                 for i, p in enumerate(prompts)]
-        pending = list(reqs)
-        while pending:
-            wave, pending = (pending[:self.slots], pending[self.slots:])
-            self._serve_wave(wave)
+        pending = deque(reqs)
+        active: List[Optional[Request]] = [None] * self.slots
+        pos = np.zeros(self.slots, np.int32)        # == per-slot length
+        tok = np.zeros((self.slots, 1), np.int32)
+
+        while pending or any(r is not None for r in active):
+            self._admit_pending(pending, active, pos, tok)
+            if not any(r is not None for r in active):
+                break                                # nothing admitted ran
+            self._decode_block(active, pos, tok)
+        if self.kv is not None:
+            self.metrics["kv_bytes_peak"] = max(
+                self.metrics["kv_bytes_peak"], self.kv.peak_bytes_in_use)
+        else:
+            self.metrics["kv_bytes_peak"] = self.kv_bytes_reserved
         return reqs
 
-    # ------------------------------------------------------------ waves
-    def _serve_wave(self, wave: List[Request]) -> None:
-        b = len(wave)
-        plen = wave[0].prompt.shape[0]
-        # Pad tail waves to the slot count: one compiled program for every
-        # wave; padded rows are computed and discarded.
-        prompts = [r.prompt for r in wave]
-        prompts += [wave[0].prompt] * (self.slots - b)
-        batch = {"tokens": jnp.asarray(np.stack(prompts))}
-        next_tok, cache = self._prefill(self.params, batch, self._slot_cache)
+    # ------------------------------------------------------- scheduling
+    def _admit_pending(self, pending, active, pos, tok) -> None:
+        """Fill every free slot from the queue — called between decode
+        dispatches, so requests join mid-stream."""
+        for s in range(self.slots):
+            while active[s] is None and pending:
+                r = pending.popleft()
+                self._admit(s, r, pos, tok)
+                if (len(r.out_tokens) >= r.max_new_tokens
+                        or pos[s] >= self.max_len):
+                    self._retire(s, r, active, pos, tok)  # prefill-only
+                else:
+                    active[s] = r
+
+    def _admit(self, slot: int, r: Request, pos, tok) -> None:
+        plen = int(r.prompt.shape[0])
+        if plen > self.max_len:
+            raise ValueError(
+                f"prompt length {plen} exceeds max_len {self.max_len}")
+        batch = {"tokens": jnp.asarray(r.prompt)[None]}
+        if self.kv is not None:
+            pages = jnp.asarray(self.kv.ensure(slot, plen))
+            next_tok, cache = self._prefill(
+                self.params, batch, self._slot_cache, jnp.int32(slot),
+                pages)
+        else:
+            next_tok, cache = self._prefill(
+                self.params, batch, self._slot_cache, jnp.int32(slot))
         # Reassign immediately after every donating dispatch: the donated
         # input buffer is deleted on accelerator backends, and a mid-wave
         # exception must not leave the engine holding a dead reference.
         self._slot_cache = cache
-        now = time.perf_counter()
-        for r, t in zip(wave, np.asarray(next_tok)[:b, 0]):
-            r.out_tokens.append(int(t))
-            r.first_token_at = now
+        t = int(np.asarray(next_tok)[0, 0])
+        r.out_tokens.append(t)
+        r.first_token_at = time.perf_counter()
+        pos[slot] = plen
+        tok[slot, 0] = t
+        self.metrics["prefills"] += 1
+        self.metrics["generated"] += 1
 
-        lengths = jnp.full((self.slots,), plen, jnp.int32)
-        pos = plen
-        steps = max(r.max_new_tokens for r in wave) - 1
-        done = 0
-        while done < steps and pos < self.max_len:
-            next_tok, cache, _pos, lengths, toks = self._decode(
-                self.params, next_tok, cache, jnp.int32(pos), lengths)
-            self._slot_cache = cache
-            now = time.perf_counter()
-            usable = min(self.decode_block, steps - done,
-                         self.max_len - pos)
-            toks_np = np.asarray(toks)                  # [N, slots]
-            for j in range(usable):
-                for r, t in zip(wave, toks_np[j, :b]):
-                    if len(r.out_tokens) < r.max_new_tokens:
-                        r.out_tokens.append(int(t))
-            done += usable
-            pos += self.decode_block
-            self.metrics["dispatches"] += 1
-            self.metrics["ticks"] += self.decode_block
-            self.metrics["generated"] += b * usable
-        now = time.perf_counter()
-        for r in wave:
-            r.done = True
-            r.finished_at = now
+    def _retire(self, slot: int, r: Request, active, pos, tok) -> None:
+        r.done = True
+        r.finished_at = time.perf_counter()
+        active[slot] = None
+        pos[slot] = 0
+        tok[slot, 0] = 0
+        if self.kv is not None:
+            self.kv.release(slot)
+
+    def _decode_block(self, active, pos, tok) -> None:
+        """One jitted dispatch: ``decode_block`` scan ticks across all
+        slots, each at its own position; harvest real tokens after."""
+        if self.kv is not None:
+            for s, r in enumerate(active):
+                if r is not None:
+                    # Allocate only what the request's remaining budget can
+                    # validly read back: scan ticks past the budget write
+                    # into unallocated positions, which route to the NULL
+                    # page, and their outputs are discarded below.
+                    h = min(self.decode_block,
+                            r.max_new_tokens - len(r.out_tokens))
+                    self.kv.ensure(s, min(int(pos[s]) + h, self.max_len))
+            next_tok, cache, toks = self._decode(
+                self.params, jnp.asarray(tok), self._slot_cache,
+                self.kv.page_table, jnp.asarray(pos), jnp.asarray(pos))
+        else:
+            next_tok, cache, toks = self._decode(
+                self.params, jnp.asarray(tok), self._slot_cache,
+                jnp.asarray(pos), jnp.asarray(pos))
+        self._slot_cache = cache
+        toks_np = np.asarray(toks)                   # [N, slots]
+        last_np = np.asarray(next_tok)               # [slots, 1]
+        useful = 0
+        for s, r in enumerate(list(active)):
+            if r is None:
+                continue
+            h = min(self.decode_block,
+                    r.max_new_tokens - len(r.out_tokens),
+                    self.max_len - int(pos[s]))
+            r.out_tokens.extend(int(t) for t in toks_np[:h, s])
+            useful = max(useful, h)
+            self.metrics["generated"] += h
+            pos[s] = min(int(pos[s]) + self.decode_block, self.max_len)
+            tok[s, 0] = last_np[s, 0]
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or pos[s] >= self.max_len):
+                self._retire(s, r, active, pos, tok)
+        self.metrics["dispatches"] += 1
+        self.metrics["ticks"] += useful
+        self.metrics["scan_ticks"] += self.decode_block

@@ -1,0 +1,252 @@
+"""Paged KV cache: fixed-size pages + slot indirection for decode.
+
+The contiguous slot cache (PR 1) reserves ``slots x max_len`` worst-case
+K/V per layer group.  This module pages it, vLLM/TensorRT-LLM style:
+
+  * K/V storage is a *pool* of fixed-size pages per layer group, stored
+    page-major and layout-canonical: ``[G, P, page_size, Hkv, hd]``
+    regardless of the model's ``kv_cache_layout`` (append/gather adapt at
+    the edges, so both "bshd" and "bhsd" configs run paged).
+  * A device-resident page table ``[slots, max_pages] int32`` maps each
+    slot's logical page j to a physical page id.  Physical page 0 is the
+    NULL page: unallocated table entries point at it, so inactive slots'
+    decode writes land in a sacrificial page and data-dependent page
+    lookups (the Pallas kernel's scalar-prefetch index map) never read out
+    of bounds.
+  * Pages are allocated from a host-side free list as a slot's sequence
+    grows and returned when the request finishes — bytes-in-use is
+    ``pages_in_use * page_bytes``, not ``slots * max_len`` worst case.
+  * Non-sequence state leaves (SSM / conv / wkv / token-shift) carry no
+    sequence axis; they stay slot-contiguous ``[G, slots, ...]`` and are
+    whole-replaced per slot.  Leaf classification comes from the shared
+    schema in ``models/params.py`` (``cache_leaf_kind``) — an unknown leaf
+    raises instead of being silently mishandled.
+
+The functional primitives (``paged_append`` / ``gather_pages`` /
+``place_prefill``) are pure: they take and return arrays so the engine can
+run them inside donated jits, and ``models/model.py`` calls
+``paged_append`` from the decode step when a page table is passed.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.params import (CacheDef, cache_defs, cache_leaf_kind,
+                             cache_leaf_name)
+
+Tree = Any
+
+NULL_PAGE = 0       # physical page reserved as the write sink for
+#                     unallocated table entries / inactive slots
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# --------------------------------------------------------------------- #
+# Functional primitives (jit-safe, layout-adapting)
+# --------------------------------------------------------------------- #
+
+def to_page_major(seq: jax.Array, layout: str) -> jax.Array:
+    """K/V with a batch axis -> canonical [..., S, H, hd] order.
+
+    seq: [B, S, H, hd] ("bshd") or [B, H, S, hd] ("bhsd").
+    """
+    if layout == "bhsd":
+        return jnp.swapaxes(seq, -3, -2)
+    return seq
+
+
+def from_page_major(seq: jax.Array, layout: str) -> jax.Array:
+    """Inverse of ``to_page_major``."""
+    if layout == "bhsd":
+        return jnp.swapaxes(seq, -3, -2)
+    return seq
+
+
+def paged_append(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
+                 new: jax.Array, *, layout: str) -> jax.Array:
+    """Scatter one decode token per slot into its page.
+
+    pool: [P, page_size, H, hd]; page_table: [B, max_pages] int32;
+    pos: [B] absolute write positions; new: [B, 1, H, hd] ("bshd") or
+    [B, H, 1, hd] ("bhsd").  Positions are clamped to the table's extent
+    (a slot at capacity rewrites its last row; the engine retires it) and
+    unallocated entries resolve to the NULL page, so the scatter is always
+    in bounds.
+    """
+    page_size = pool.shape[1]
+    b = page_table.shape[0]
+    tok = to_page_major(new, layout)[:, 0]                 # [B, H, hd]
+    pos = jnp.clip(pos, 0, page_table.shape[1] * page_size - 1)
+    phys = page_table[jnp.arange(b), pos // page_size]     # [B]
+    return pool.at[phys, pos % page_size].set(tok.astype(pool.dtype))
+
+
+def gather_pages(pool: jax.Array, page_table: jax.Array, *,
+                 layout: str) -> jax.Array:
+    """Materialize per-slot contiguous K/V from the pool (reference path).
+
+    pool: [P, page_size, H, hd] -> [B, max_pages*page_size, H, hd]
+    ("bshd") or [B, H, S, hd] ("bhsd").  Entries past a slot's length read
+    whatever its (or the NULL) pages hold; callers mask by length exactly
+    as with the contiguous cache.
+    """
+    pages = pool[page_table]                      # [B, max_pages, ps, H, hd]
+    b, n, ps, h, hd = pages.shape
+    return from_page_major(pages.reshape(b, n * ps, h, hd), layout)
+
+
+def place_prefill(cache: Tree, fresh: Tree, slot: jax.Array,
+                  pages: jax.Array, *, layout: str) -> Tree:
+    """Write one request's prefill cache into the paged pools.
+
+    ``fresh`` is a batch-1 prefill cache ([G, 1, ...] leaves).  K/V leaves
+    are chunked into pages and scattered to the physical ``pages`` of this
+    slot; state leaves replace the slot row.  Runs inside a donated jit —
+    both scatters update in place.
+    """
+    page_size = None
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if cache_leaf_kind(cache_leaf_name(path)) == "kv":
+            page_size = leaf.shape[2]
+            break
+
+    def place(path, pool, small):
+        kind = cache_leaf_kind(cache_leaf_name(path))
+        if kind == "state":
+            return pool.at[:, slot].set(small[:, 0].astype(pool.dtype))
+        seq = to_page_major(small, layout)[:, 0]           # [G, S, H, hd]
+        g, s, h, hd = seq.shape
+        n = pages.shape[0]
+        pad = n * page_size - s
+        if pad:
+            seq = jnp.pad(seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        chunks = seq.reshape(g, n, page_size, h, hd)
+        return pool.at[:, pages].set(chunks.astype(pool.dtype))
+
+    return jax.tree_util.tree_map_with_path(place, cache, fresh)
+
+
+# --------------------------------------------------------------------- #
+# Pool construction
+# --------------------------------------------------------------------- #
+
+def paged_cache_defs(cfg: ModelConfig, slots: int, max_len: int,
+                     page_size: int) -> Tree:
+    """Cache definition tree with K/V leaves replaced by page pools."""
+    num_pages = 1 + slots * cdiv(max_len, page_size)       # +1: NULL page
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+
+    def to_pool(path, cd):
+        if cache_leaf_kind(cache_leaf_name(path)) == "state":
+            return cd
+        groups = cd.shape[0]
+        return CacheDef((groups, num_pages, page_size, hkv, hd),
+                        ("layers", "kv_pages", None, "kv_heads", None),
+                        cd.dtype)
+
+    return jax.tree_util.tree_map_with_path(
+        to_pool, cache_defs(cfg, slots, max_len),
+        is_leaf=lambda x: isinstance(x, CacheDef))
+
+
+class PagedKVCache:
+    """Device page pools + page table + host-side free-list allocator.
+
+    The device state (``cache`` pytree, ``page_table``) flows through the
+    engine's donated dispatches; this object owns the *allocation* state:
+    which physical pages belong to which slot, and which are free.  The
+    page table itself is kept as host numpy (tiny) and re-uploaded per
+    dispatch — allocation happens between dispatches, never inside jit.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
+                 page_size: int = 16):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = min(page_size, max_len)
+        self.pages_per_slot = cdiv(max_len, self.page_size)
+        self.num_pages = 1 + slots * self.pages_per_slot
+        self._defs = paged_cache_defs(cfg, slots, max_len, self.page_size)
+        # Bytes of ONE physical page summed over every K/V pool leaf (all
+        # layer groups) — the unit of the bytes-in-use accounting.
+        self.page_bytes = 0
+        for path, cd in jax.tree_util.tree_flatten_with_path(
+                self._defs, is_leaf=lambda x: isinstance(x, CacheDef))[0]:
+            if cache_leaf_kind(cache_leaf_name(path)) == "kv":
+                g, _, ps, h, hd = cd.shape
+                self.page_bytes += (g * ps * h * hd
+                                    * jnp.dtype(cd.dtype).itemsize)
+        self._table = np.zeros((slots, self.pages_per_slot), np.int32)
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self.peak_pages = 0
+
+    def init_cache(self) -> Tree:
+        """Fresh device cache tree (paged pools + slot-contiguous state).
+        The engine owns it from here: it is donated through every dispatch
+        and this object only tracks which pages are whose."""
+        return jax.tree.map(
+            lambda cd: jnp.zeros(cd.shape, cd.dtype), self._defs,
+            is_leaf=lambda x: isinstance(x, CacheDef))
+
+    # ------------------------------------------------------------ state
+    @property
+    def page_table(self) -> jax.Array:
+        return jnp.asarray(self._table)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(o) for o in self._owned)
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self.pages_in_use * self.page_bytes
+
+    @property
+    def peak_bytes_in_use(self) -> int:
+        return self.peak_pages * self.page_bytes
+
+    def slot_pages(self, slot: int) -> np.ndarray:
+        return np.asarray(self._owned[slot], np.int32)
+
+    # ------------------------------------------------------- allocation
+    def ensure(self, slot: int, length: int) -> np.ndarray:
+        """Allocate pages so ``slot`` can hold ``length`` tokens; returns
+        the slot's physical pages.  ``length`` beyond ``max_len`` raises —
+        the pool is sized for ``slots * max_len`` exactly, so with that
+        contract enforced the free list cannot run dry (the RuntimeError
+        below is an internal-invariant guard, not an expected error)."""
+        if length > self.max_len:
+            raise ValueError(
+                f"cannot ensure {length} tokens: slot capacity is "
+                f"max_len={self.max_len}")
+        need = cdiv(max(length, 1), self.page_size)
+        owned = self._owned[slot]
+        while len(owned) < need:
+            if not self._free:
+                raise RuntimeError(
+                    f"KV page pool exhausted ({self.num_pages - 1} pages)")
+            page = self._free.pop()
+            self._table[slot, len(owned)] = page
+            owned.append(page)
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return self.slot_pages(slot)
+
+    def release(self, slot: int) -> None:
+        """Return a finished slot's pages to the free list and point its
+        table row back at the NULL page."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self._table[slot, :] = NULL_PAGE

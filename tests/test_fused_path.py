@@ -160,9 +160,11 @@ def test_moe_experts_dispatch(rng):
 
 # ------------------------------------------------ engine decode fast path
 
+@pytest.mark.slow
 def test_engine_block_decode_matches_per_token_loop(rng):
-    """The >=8-ticks-per-dispatch scan produces the exact same greedy
-    continuation as a one-token-at-a-time decode loop."""
+    """The >=8-ticks-per-dispatch scan over the paged cache produces the
+    exact same greedy continuation as a one-token-at-a-time decode loop
+    against a contiguous cache."""
     from repro.serving import ServingEngine
 
     cfg = get_config("qwen1.5-0.5b").reduced()
@@ -190,18 +192,23 @@ def test_engine_block_decode_matches_per_token_loop(rng):
                            decode_block=8)
     reqs = engine.generate([prompt], max_new_tokens=new_tokens)
     assert reqs[0].out_tokens == ref
-    # Fast-path invariants: >= 8 ticks per jitted dispatch, no host-side
-    # per-wave cache pad (the engine module no longer defines one).
+    # Fast-path invariants: >= 8 ticks per jitted dispatch, TRUE token
+    # accounting (prefill token + harvested decode tokens; scan overshoot
+    # past the budget is excluded), no host-side per-wave cache pad (the
+    # engine module no longer defines one).
     assert engine.metrics["decode_block"] >= 8
-    assert engine.metrics["ticks"] == \
+    assert engine.metrics["generated"] == new_tokens
+    assert engine.metrics["scan_ticks"] == \
         engine.metrics["dispatches"] * engine.metrics["decode_block"]
+    assert engine.metrics["ticks"] <= engine.metrics["scan_ticks"]
     import repro.serving.engine as eng_mod
     assert not hasattr(eng_mod, "_pad_cache_seq")
 
 
-def test_engine_multiwave_with_padded_tail(rng):
-    """3 requests over 2 slots: tail wave is padded to the slot count and
-    the donated slot cache survives consecutive waves."""
+@pytest.mark.slow
+def test_engine_continuous_refill(rng):
+    """3 requests over 2 slots: the third joins the moment a slot frees
+    (no wave barrier) and the donated paged cache survives the handoff."""
     from repro.serving import ServingEngine
 
     cfg = get_config("qwen1.5-0.5b").reduced()
@@ -214,6 +221,9 @@ def test_engine_multiwave_with_padded_tail(rng):
     reqs = engine.generate(prompts, max_new_tokens=10)
     assert all(len(r.out_tokens) == 10 for r in reqs)
     assert all(r.done for r in reqs)
-    # Same prompt => same greedy continuation regardless of wave/slot.
+    assert engine.metrics["generated"] == 30
+    # All pages returned to the free list once every request retired.
+    assert engine.kv is not None and engine.kv.pages_in_use == 0
+    # Same prompt => same greedy continuation regardless of slot/joining.
     solo = engine.generate([prompts[0]], max_new_tokens=10)
     assert solo[0].out_tokens == reqs[0].out_tokens
