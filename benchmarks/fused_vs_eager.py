@@ -10,6 +10,12 @@ Measures the three model entry points under both execution paths:
     engine default (page-table indirection + plan-selected Pallas paged
     decode attention under ``fused``); the contiguous run keeps the PR-1
     slots x max_len cache on the same scheduler for a like-for-like A/B.
+  * prefill burst     — a mixed-length burst (>= 4 distinct prompt
+    lengths) through a FRESH engine, CHUNKED prefill (one compiled
+    program for the whole mix) vs the per-length-compile baseline:
+    aggregate TTFT and the prefill compile count (the engine's
+    trace-time probe).  The compile storm is the cost being measured, so
+    no warmup run precedes the burst.
 
 Run on CPU the Pallas kernels execute in *interpret mode* (the kernel body
 runs in Python per grid step), so fused numbers here validate the dispatch
@@ -37,7 +43,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.kernels.common import interpret_default
-from repro.models import forward_train, init_params, prefill, resolve_plan
+from repro.models import (forward_train, init_params, prefill, resolve_plan,
+                          supports_chunked_prefill)
 from repro.serving import ServingEngine
 
 ARCHS = ("gpt2", "llama3-8b")        # layernorm/GELU-MLP and RMSNorm/SwiGLU-GQA
@@ -118,7 +125,44 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
             decode["paged"]["kv_bytes_peak"]
             / max(decode["contiguous"]["kv_bytes_peak"], 1))
 
+        # Mixed-length prefill burst: chunked (one program) vs per-length
+        # (one program per distinct length).  Fresh engines, no warmup —
+        # compile latency IS the number under test.  Archs outside the
+        # chunked gate (SSM/RWKV/mrope) skip the section rather than
+        # crash the report.
+        burst_lens = sorted({max(4, seq // 4), seq // 2,
+                             max(8, 3 * seq // 4), seq})
+        nprng = np.random.default_rng(12)
+        burst_prompts = [nprng.integers(1, base.vocab_size, n,
+                                        dtype=np.int32)
+                         for n in burst_lens]
+        burst: Dict[str, Any] = {"lengths": burst_lens}
+        modes = ((("chunked", True),) if supports_chunked_prefill(base)
+                 else ()) + (("per_length", False),)
+        for bname, chunk_mode in modes:
+            eng = ServingEngine(cfg, params, batch_slots=batch,
+                                max_len=max_len,
+                                decode_block=decode_block,
+                                chunked=chunk_mode)
+            t0 = time.perf_counter()
+            breqs = eng.generate(burst_prompts, max_new_tokens=4)
+            wall = time.perf_counter() - t0
+            ttfts = [r.ttft_s for r in breqs]
+            burst[bname] = {
+                "wall_s": wall,
+                "ttft_mean_s": float(np.nanmean(ttfts)),
+                "ttft_max_s": float(np.nanmax(ttfts)),
+                "prefill_compiles": int(eng.metrics["prefill_traces"]),
+                "prefill_chunks": int(eng.metrics["prefill_chunks"]),
+                "prefill_chunk": int(eng.metrics["prefill_chunk"]),
+            }
+        if "chunked" in burst:
+            burst["chunked_over_per_length_ttft"] = (
+                burst["chunked"]["ttft_mean_s"]
+                / max(burst["per_length"]["ttft_mean_s"], 1e-9))
+
         result[mode] = {
+            "prefill_burst": burst,
             "train_s": train_s,
             "train_tokens_per_s": batch * seq / train_s,
             "prefill_s": prefill_s,
@@ -164,12 +208,25 @@ def main(argv=None) -> int:
         report["configs"].append(r)
         e, f = r["eager"], r["fused"]
         dc = e["decode"]
+        pb = e["prefill_burst"]
+        if "chunked" in pb:
+            burst_note = (
+                f"burst ttft {pb['chunked']['ttft_mean_s']*1e3:.0f}ms "
+                f"({pb['chunked']['prefill_compiles']} compile) vs "
+                f"{pb['per_length']['ttft_mean_s']*1e3:.0f}ms "
+                f"({pb['per_length']['prefill_compiles']} compiles)")
+        else:
+            burst_note = (
+                f"burst ttft {pb['per_length']['ttft_mean_s']*1e3:.0f}ms "
+                f"({pb['per_length']['prefill_compiles']} compiles, "
+                "no chunked support)")
         print(f"{r['arch']}: train {e['train_s']*1e3:.1f}ms eager / "
               f"{f['train_s']*1e3:.1f}ms fused | decode "
               f"{e['decode_tokens_per_s']:.1f} vs "
               f"{f['decode_tokens_per_s']:.1f} tok/s | "
               f"kv peak {dc['paged']['kv_bytes_peak']} paged / "
               f"{dc['contiguous']['kv_bytes_peak']} contiguous bytes | "
+              f"{burst_note} | "
               f"loss diff {r['loss_abs_diff']:.2e}", flush=True)
 
     with open(args.out, "w") as fh:

@@ -128,6 +128,22 @@ class StreamPlan:
                 return lp.decode_attn.kw.get("page_size", default)
         return default
 
+    def prefill_chunk_size(self, page_size: int, default: int = 128) -> int:
+        """Chunked-prefill granule: the tile the DSE chose for the
+        attention op's QUERY stream (``block_q``), rounded UP to a whole
+        number of KV pages so chunk boundaries always land on page
+        boundaries — the compiler's tile choice governs prefill
+        granularity exactly as it governs the decode page size.  Falls
+        back to ``default`` (then page-aligned) when no layer fused
+        attention."""
+        base = default
+        for _, lp in self.layers:
+            if lp.attention.fused:
+                base = int(lp.attention.kw.get("block_q", default))
+                break
+        ps = max(1, int(page_size))
+        return max(1, -(-int(base) // ps)) * ps
+
     def summary(self) -> Dict[str, object]:
         return {
             "arch": self.arch,

@@ -79,12 +79,78 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[0] / l).astype(o_ref.dtype)
 
 
+def _flash_kernel_offset(meta_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                         acc_ref, *, n_kv: int, block_q: int, block_kv: int,
+                         scale: float, causal: bool, window: int):
+    """Offset twin of ``_flash_kernel`` for chunked prefill: query
+    positions are ``q_offset + i`` and the valid KV length is dynamic,
+    both carried in the scalar-prefetch ``meta_ref = [q_offset, kv_len]``
+    — one compiled program serves any chunk index over any cache fill.
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    q_off = meta_ref[0]
+    kv_len = meta_ref[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q + q_off          # absolute query positions
+    k_start = ki * block_kv
+    # Block-level skips mirror the static kernel, but against the DYNAMIC
+    # offset/length: kv blocks past the valid cache fill, or strictly
+    # after every (absolute) query position of this q block, issue no MXU
+    # work.  With a sliding window, blocks wholly before the earliest
+    # query's window are dead too.
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window:
+        run = jnp.logical_and(run, k_start + block_kv > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [bq, bkv]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[0] = acc_ref[0] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
 def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        causal: bool = True, window: int = 0,
-                       kv_len: Optional[int] = None,
+                       kv_len=None,
                        scale: Optional[float] = None,
                        kv_group: int = 1,
                        block_q: int = 512, block_kv: int = 512,
+                       q_offset=None,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Flattened-head core: q [Hq_, Sq, D], k/v [Hkv_, Skv, D] where
     ``Hq_ == Hkv_ * kv_group`` -> [Hq_, Sq, D].
@@ -93,6 +159,13 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``kv_group`` query-head programs sharing a KV head to the SAME K/V
     blocks (itensor view: the head dim is a *reuse* dim of the K/V stream —
     Fig. 5(c) again).
+
+    ``q_offset`` (None = 0, static) shifts query positions for chunked
+    prefill: query i masks as absolute position ``q_offset + i`` against
+    a KV extent that already holds earlier chunks.  When it is given (an
+    int or a traced scalar), it and ``kv_len`` ride in as scalar-prefetch
+    operands so ONE compiled program serves every chunk of every prompt;
+    ``kv_len`` may then be dynamic too (the valid fill of the cache).
     """
     h, sq, d = q.shape
     _, skv, _ = k.shape
@@ -103,6 +176,36 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
     grid = (h, sq // bq, skv // bkv)
     interpret = interpret_default() if interpret is None else interpret
     g = kv_group
+
+    if q_offset is not None:
+        meta = jnp.stack([jnp.asarray(q_offset, jnp.int32).reshape(()),
+                          jnp.asarray(kv_len, jnp.int32).reshape(())])
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,           # [q_offset, kv_len]
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, d), lambda b, i, j, meta: (b, i, 0)),
+                pl.BlockSpec((1, bkv, d),
+                             lambda b, i, j, meta: (b // g, j, 0)),
+                pl.BlockSpec((1, bkv, d),
+                             lambda b, i, j, meta: (b // g, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, d),
+                                   lambda b, i, j, meta: (b, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, bq, 1), jnp.float32),
+                pltpu.VMEM((1, bq, 1), jnp.float32),
+                pltpu.VMEM((1, bq, d), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            functools.partial(
+                _flash_kernel_offset, n_kv=grid[2], block_q=bq,
+                block_kv=bkv, scale=scale, causal=causal, window=window),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+            interpret=interpret,
+        )(meta, q, k, v)
 
     return pl.pallas_call(
         functools.partial(

@@ -36,14 +36,19 @@ __all__ = [
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
-                    kv_len: Optional[int] = None,
+                    kv_len=None,
                     block_q: int = 512, block_kv: int = 512,
+                    q_offset=None,
                     interpret: Optional[bool] = None) -> jax.Array:
     """Model-layout flash attention with GQA.
 
     q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
     Query heads are grouped over their KV head so one kernel instance
     serves a (kv-head, group) pair without materializing repeated K/V.
+
+    ``q_offset`` (chunked prefill) shifts query positions by a dynamic
+    scalar so a chunk's queries attend the already-cached prefix; with it
+    set, ``kv_len`` may be a traced scalar (the cache's valid fill).
     """
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
@@ -64,7 +69,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = flash_attention_2d(qk, kk, vk, causal=causal, window=window,
                              kv_len=kv_len, scale=scale, kv_group=g,
                              block_q=block_q, block_kv=block_kv,
-                             interpret=interpret)
+                             q_offset=q_offset, interpret=interpret)
     out = out.reshape(b, hkv, g, sq, dp).transpose(0, 3, 1, 2, 4) \
         .reshape(b, sq, hq, dp)
     return out[..., :d]

@@ -1,7 +1,8 @@
 """Executable JAX models for the assigned architectures."""
 
 from .model import (decode_step, forward_hidden, forward_train, prefill,
-                    resolve_plan, streamed_xent)
+                    prefill_chunk, resolve_plan, streamed_xent,
+                    supports_chunked_prefill)
 from .params import (KV_CACHE_LEAVES, STATE_CACHE_LEAVES, abstract_cache,
                      abstract_params, cache_defs, cache_leaf_kind,
                      cache_leaf_name, cache_logical_axes, init_cache,
@@ -10,7 +11,8 @@ from .params import (KV_CACHE_LEAVES, STATE_CACHE_LEAVES, abstract_cache,
 
 __all__ = [
     "decode_step", "forward_hidden", "forward_train", "prefill",
-    "resolve_plan", "streamed_xent",
+    "prefill_chunk", "resolve_plan", "streamed_xent",
+    "supports_chunked_prefill",
     "KV_CACHE_LEAVES", "STATE_CACHE_LEAVES", "abstract_cache",
     "abstract_params", "cache_defs", "cache_leaf_kind", "cache_leaf_name",
     "cache_logical_axes", "init_cache", "init_params", "kv_seq_axis",

@@ -139,6 +139,7 @@ def streaming_attention(
     q_offset: int = 0,
     window: int = 0,
     chunk_size: int = 1024,
+    kv_len=None,
     scale: Optional[float] = None,
     remat_chunk: bool = False,
 ) -> jax.Array:
@@ -149,12 +150,16 @@ def streaming_attention(
         causal: apply causal masking with query positions q_offset + i.
         q_offset: absolute position of q[0] relative to k[0] (prefill: 0 when
             Sq == Skv; decode-style calls use full-cache helpers instead).
+            May be a traced scalar (chunked prefill against a cache).
         window: sliding window size (0 = unlimited); causal only.
         chunk_size: KV tile length (the stream token granularity).
+        kv_len: valid KV entries (default Skv); may be a traced scalar when
+            K/V come from a partially-filled cache extent.
     Returns: [B, Sq, Hq, D].
     """
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
+    kv_len = skv if kv_len is None else kv_len
     g = hq // hkv
     sc = scale if scale is not None else 1.0 / math.sqrt(d)
     qg = (q * sc).reshape(b, sq, hkv, g, d)
@@ -177,7 +182,7 @@ def streaming_attention(
         s = _gqa_scores(qg, kb)                       # [B,Kh,G,Sq,C]
         mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
             jnp.ones((sq, c), dtype=bool)
-        mask = jnp.logical_and(mask, kv_pos[None, :] < skv)
+        mask = jnp.logical_and(mask, kv_pos[None, :] < kv_len)
         if window:
             mask = jnp.logical_and(
                 mask, kv_pos[None, :] > q_pos[:, None] - window)

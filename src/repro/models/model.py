@@ -484,6 +484,188 @@ def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
 
 
 # --------------------------------------------------------------------- #
+# Chunked prefill (fixed-shape tiles against the paged decode cache)
+# --------------------------------------------------------------------- #
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Whether ``prefill_chunk`` can serve this config.
+
+    Chunked prefill carries per-request state between chunks through the
+    paged KV pools — which only exists for attention K/V.  SSM / RWKV /
+    hybrid stacks carry recurrent state (ssm/conv/wkv/token-shift) that
+    the full-sequence mixers cannot yet resume mid-prompt, and mrope's
+    3-axis positions are not expressible as a scalar chunk offset; those
+    configs prefill whole-prompt (the engine falls back automatically).
+    """
+    kinds = {cfg.layer_kind(i) for i in range(cfg.num_layers)}
+    # cfg.causal is load-bearing: causal masking is what hides the final
+    # chunk's zero-pad K/V (kv_len counts pad positions as valid).
+    return (cfg.causal and cfg.rope != "mrope"
+            and kinds <= {"attn", "local_attn", "global_attn"})
+
+
+def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
+                      table_row: jax.Array, chunk_pages: jax.Array,
+                      offset: jax.Array, kv_len: jax.Array, *,
+                      window: int = 0,
+                      lplan: Optional[LPlan] = None) -> Tuple[jax.Array, Tree]:
+    """One attention block over a prompt CHUNK, against the paged cache.
+
+    x: [1, C, D]; cache: {"k","v"} pools [P, page_size, Hkv, hd];
+    table_row: [max_pages] the slot's logical->physical page map;
+    chunk_pages: [C // page_size] physical pages of THIS chunk;
+    offset: dynamic chunk start position; kv_len: dynamic valid KV extent
+    (= offset + C: earlier chunks plus this one).
+
+    The chunk's K/V are written into their pages FIRST, then attention
+    gathers the slot's full page extent and masks by (causal @ absolute
+    positions, kv_len) — so queries see chunks 0..k-1 AND their own chunk
+    through the same pools the decode step will keep appending to.  Pad
+    tokens of a final partial chunk sit at positions past every real
+    query, so causal masking excludes them for free.
+    """
+    # Function-local for the same circular-import reason as the decode
+    # path: serving imports models at module load.
+    from ..serving.kv_cache import gather_pages, place_chunk_pages
+    b, c, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    layout = cfg.kv_cache_layout
+    ap = p["attn"]
+    q, k, v = _project_qkv(cfg, ap, x, p["ln1"], lplan)
+    q = q.reshape(b, c, hq, hd)
+    k = k.reshape(b, c, hkv, hd)
+    v = v.reshape(b, c, hkv, hd)
+    q, k = _qk_normed(cfg, ap, q, k)
+    positions = offset + jnp.arange(c)[None]               # [1, C]
+    q = L.apply_positional(cfg.rope, q, positions, cfg.rope_theta)
+    k = L.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
+    k_new = k.transpose(0, 2, 1, 3) if layout == "bhsd" else k
+    v_new = v.transpose(0, 2, 1, 3) if layout == "bhsd" else v
+    kc = place_chunk_pages(cache["k"], k_new, chunk_pages, layout=layout)
+    vc = place_chunk_pages(cache["v"], v_new, chunk_pages, layout=layout)
+    kseq = gather_pages(kc, table_row[None], layout=layout)
+    vseq = gather_pages(vc, table_row[None], layout=layout)
+    if layout == "bhsd":
+        kseq = kseq.transpose(0, 2, 1, 3)
+        vseq = vseq.transpose(0, 2, 1, 3)
+    choice = lplan.attention if lplan is not None else None
+    if choice is not None and choice.fused:
+        # The plan's flash kernel, offset twin: q_offset/kv_len ride in as
+        # scalar-prefetch operands so one compiled program covers every
+        # chunk index over any cache fill.
+        from ..kernels import flash_attention
+        o = flash_attention(q, kseq, vseq, causal=cfg.causal, window=window,
+                            q_offset=offset, kv_len=kv_len,
+                            **choice.kw)
+    else:
+        o = L.streaming_attention(q, kseq, vseq, causal=cfg.causal,
+                                  q_offset=offset, window=window,
+                                  kv_len=kv_len)
+    x = x + o.reshape(b, c, hq * hd) @ ap["wo"]
+    x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
+    return x, {"k": kc, "v": vc}
+
+
+def _apply_block_chunk(cfg: ModelConfig, kind: str, p: Tree, x: jax.Array,
+                       cache: Tree, table_row: jax.Array,
+                       chunk_pages: jax.Array, offset: jax.Array,
+                       kv_len: jax.Array,
+                       lplan: Optional[LPlan] = None) -> Tuple[jax.Array, Tree]:
+    if kind not in ("attn", "local_attn", "global_attn"):
+        raise NotImplementedError(
+            f"chunked prefill does not support layer kind {kind!r} "
+            "(gate on supports_chunked_prefill)")
+    window = cfg.sliding_window if kind == "local_attn" else 0
+    return _attn_block_chunk(cfg, p, x, cache, table_row, chunk_pages,
+                             offset, kv_len, window=window, lplan=lplan)
+
+
+def prefill_chunk(params: Tree, cfg: ModelConfig, tokens: jax.Array,
+                  cache: Tree, table_row: jax.Array, chunk_pages: jax.Array,
+                  offset: jax.Array, last_idx: jax.Array, *,
+                  plan: Optional[Plan] = None,
+                  ) -> Tuple[jax.Array, jax.Array, Tree]:
+    """Process ONE fixed-size prompt chunk against the paged decode cache.
+
+    tokens: [1, C] int32, the chunk (zero-padded past the prompt's end on
+    the final chunk); cache: paged pools from ``serving.kv_cache``
+    (donated by the engine — K/V scatters update in place); table_row:
+    [max_pages] int32 slot page map; chunk_pages: [C // page_size] int32
+    physical pages for this chunk; offset: dynamic chunk start position;
+    last_idx: within-chunk index of the prompt's last real token (only
+    meaningful on the final chunk — earlier dispatches discard the token).
+
+    Every dynamic quantity (offset, last_idx, page ids) is a traced
+    operand, so ONE compiled program serves every chunk of every prompt —
+    the compile count is independent of the prompt-length mix.  Returns
+    (next_token [1, 1], logits [1, 1, Vp] at ``last_idx``, new_cache).
+    """
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"chunked prefill unsupported for config {cfg.name!r}")
+    params = _cast_tree(cfg, params)
+    b, c = tokens.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    x = _c(cfg, jnp.take(params["embed"], tokens, axis=0))
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.rope == "none" and "pos_embed" in params:
+        positions = jnp.broadcast_to(offset + jnp.arange(c)[None], (b, c))
+        x = x + jnp.take(_c(cfg, params["pos_embed"]), positions, axis=0)
+    # Plan keyed on the chunk token count and the gathered cache extent —
+    # both static, so the plan (like the program) is one per engine.
+    kv_extent = int(table_row.shape[0]) * _cache_page_size(cache)
+    plan = resolve_plan(cfg, b * c, kv_len=kv_extent, plan=plan)
+    kv_len = offset + c
+    period = len(cfg.layer_pattern)
+    groups = cfg.num_layers // period
+
+    def group_body(x, inp):
+        block_params, cache_g = inp
+        new_caches = []
+        for pidx in range(period):
+            kind = cfg.layer_pattern[pidx]
+            x, nc = _apply_block_chunk(cfg, kind, block_params[pidx], x,
+                                       cache_g[pidx], table_row,
+                                       chunk_pages, offset, kv_len,
+                                       lplan=_lplan(plan, kind))
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if groups > 0:
+        x, new_blocks = lax.scan(group_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    else:
+        new_blocks = ()
+    new_rest = []
+    for i, bp in enumerate(params["rest"]):
+        kind = cfg.layer_kind(groups * period + i)
+        c_i = jax.tree.map(lambda a: a[0], cache["rest"][i])
+        x, nc = _apply_block_chunk(cfg, kind, bp, x, c_i, table_row,
+                                   chunk_pages, offset, kv_len,
+                                   lplan=_lplan(plan, kind))
+        new_rest.append(jax.tree.map(lambda a: a[None], nc))
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    h_last = lax.dynamic_slice_in_dim(x, jnp.asarray(last_idx, jnp.int32),
+                                      1, axis=1)            # [1, 1, D]
+    logits = (h_last @ _c(cfg, params["lm_head"])).astype(jnp.float32)
+    vp = logits.shape[-1]
+    logits = jnp.where((jnp.arange(vp) >= cfg.vocab_size)[None, None],
+                       -1e30, logits)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, logits, {"blocks": new_blocks,
+                                 "rest": tuple(new_rest)}
+
+
+def _cache_page_size(cache: Tree) -> int:
+    """Page size of a paged cache tree (shape[2] of any K/V pool leaf)."""
+    from .params import cache_leaf_kind, cache_leaf_name
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if cache_leaf_kind(cache_leaf_name(path)) == "kv":
+            return int(leaf.shape[2])
+    raise ValueError("cache tree holds no K/V pool leaves")
+
+
+# --------------------------------------------------------------------- #
 # Decode
 # --------------------------------------------------------------------- #
 

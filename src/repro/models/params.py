@@ -330,7 +330,12 @@ def _attn_cache(cfg: ModelConfig, groups: int, batch: int,
     else:
         shape = (groups, batch, max_len, hkv, hd)
         axes = ("layers", "kv_batch", "kv_seq", "kv_heads", None)
-    return {"k": CacheDef(shape, axes), "v": CacheDef(shape, axes)}
+    # K/V storage follows the compute dtype: under bf16 compute the cache
+    # rounds nothing the activations didn't already round, and under f32
+    # compute a bf16 cache would make chunked prefill (which re-reads its
+    # own chunk's K/V through the cache) diverge from whole-prompt prefill.
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {"k": CacheDef(shape, axes, dt), "v": CacheDef(shape, axes, dt)}
 
 
 def _mamba_cache(cfg: ModelConfig, groups: int, batch: int) -> Dict[str, CacheDef]:

@@ -1,5 +1,6 @@
 """Serving runtime: continuous-batching engine over a paged KV cache."""
 from .engine import Request, ServingEngine
-from .kv_cache import PagedKVCache, gather_pages, paged_append, place_prefill
+from .kv_cache import (PagedKVCache, gather_pages, paged_append,
+                       place_chunk_pages, place_prefill)
 __all__ = ["Request", "ServingEngine", "PagedKVCache", "gather_pages",
-           "paged_append", "place_prefill"]
+           "paged_append", "place_chunk_pages", "place_prefill"]

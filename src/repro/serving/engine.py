@@ -7,6 +7,25 @@ one at length 300 inside the same jitted dispatch, and a request that
 finishes mid-stream hands its slot (and its KV pages) to the next pending
 request while the others keep decoding.
 
+Chunked prefill (§Perf, DESIGN.md §8b): with the paged cache, prompts are
+prefilled in FIXED-SIZE chunks — a plan-derived multiple of the KV page
+size, so chunk boundaries land on page boundaries — through ONE compiled
+``prefill_chunk`` program whose offset/page-id operands are traced
+scalars.  The compile count is therefore independent of the prompt-length
+mix: a burst of 20 distinct lengths compiles one prefill program plus one
+decode program, where the per-length path compiled 20.  Chunk *k* writes
+its K/V into its pages and attends to chunks 0..k-1 through the same
+pools the decode step appends to, and a half-prefilled request yields the
+device between chunks: a token-budget scheduler hands each dispatch
+either prefill chunks, a decode block, or both, so arrivals no longer
+serialize behind whole-prompt prefills.  SSM/RWKV/hybrid configs (whose
+recurrent state cannot yet resume mid-prompt) and the contiguous cache
+fall back to whole-prompt prefill automatically.
+
+Admission contract: an empty or over-long (``plen > max_len``) prompt is
+FAILED at admission (``Request.failed`` + ``Request.error``) without ever
+taking a slot or a page — it cannot strand the requests already decoding.
+
 Decode hot loop (§Perf):
 
   * The KV cache is PAGED (``kv_cache.PagedKVCache``): fixed-size pages,
@@ -25,16 +44,19 @@ Decode hot loop (§Perf):
     so K/V updates happen in place; decode runs ``decode_block`` ticks
     per jitted dispatch as a ``lax.scan`` over ``decode_step`` with
     per-slot position/length vectors.
-  * Prefill is per-request (batch 1) at the request's own length and is
-    placed at the slot's own offset — no same-length-wave assumption.
-    Inactive slots ride along in decode dispatches writing into the NULL
-    page (paged) or their own masked rows (contiguous); their outputs are
-    discarded on the host.
+  * Slots that are idle — or parked mid-prefill with live pages — ride
+    along in decode dispatches with their write position at the table
+    extent, so ``paged_append`` routes their writes to the NULL page and
+    a half-prefilled slot's K/V survives interleaved decode blocks; their
+    outputs are discarded on the host.
 
 Metrics count REAL work: ``generated`` is tokens actually delivered to
 requests (padding slots and past-budget scan ticks excluded), ``ticks``
-is the per-dispatch maximum of useful ticks, and ``scan_ticks`` is what
-the hardware executed — their ratio is the block-decode efficiency.
+is the per-dispatch maximum of useful ticks, ``scan_ticks`` is what the
+hardware executed — their ratio is the block-decode efficiency — and
+``prefill_traces`` / ``decode_traces`` count jit RETRACES of the two
+dispatch programs (a trace-time probe: the traced Python body bumps a
+host counter), the compile-storm signal this engine exists to flatten.
 """
 
 from __future__ import annotations
@@ -50,9 +72,11 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig
-from ..models import decode_step, init_cache, prefill, resolve_plan
+from ..models import (decode_step, init_cache, prefill, resolve_plan,
+                      supports_chunked_prefill)
+from ..models import prefill_chunk as _model_prefill_chunk
 from ..models.params import cache_leaf_kind, cache_leaf_name
-from .kv_cache import PagedKVCache, place_prefill
+from .kv_cache import PagedKVCache, cdiv, place_prefill, stage_chunk
 
 Tree = Any
 
@@ -64,16 +88,27 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    failed: bool = False
+    error: Optional[str] = None
+    prefill_pos: int = 0            # prompt tokens already prefilled
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
 
     @property
     def ttft_s(self) -> float:
+        """Time to first token; ``nan`` until a first token exists (never
+        admitted, failed at admission, or still queued)."""
+        if self.first_token_at <= 0.0 or self.submitted_at <= 0.0:
+            return float("nan")
         return self.first_token_at - self.submitted_at
 
     @property
     def latency_s(self) -> float:
+        """Submit-to-finish wall time; ``nan`` until the request finished
+        (and for requests that never entered the engine)."""
+        if self.finished_at <= 0.0 or self.submitted_at <= 0.0:
+            return float("nan")
         return self.finished_at - self.submitted_at
 
 
@@ -99,20 +134,41 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Tree, *,
                  batch_slots: int = 4, max_len: int = 256,
                  decode_block: int = 16, paged: bool = True,
-                 page_size: Optional[int] = None):
+                 page_size: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 chunked: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.decode_block = max(1, decode_block)
         self.paged = paged
+        # Trace-time probes: the traced bodies below bump these counters,
+        # so they count PROGRAMS BUILT, not dispatches — the engine's
+        # compile-storm signal.
+        self._traces: Dict[str, int] = {"prefill": 0, "decode": 0}
 
+        # One plan resolution drives both stream granularities: the KV
+        # page size (decode) and the prefill chunk size (a multiple of
+        # it).  None when the config runs eager.
+        plan = resolve_plan(cfg, batch_slots, kv_len=max_len)
         if page_size is None:
             # Page size = the StreamPlan's KV stream granule (the raw DSE
             # tile its paged-attention choice carries); 16 when eager.
-            plan = resolve_plan(cfg, batch_slots, kv_len=max_len)
             page_size = (plan.decode_page_size(16) if plan is not None
                          else 16)
+
+        if chunked is None:
+            chunked = paged and supports_chunked_prefill(cfg)
+        if chunked and not paged:
+            raise ValueError("chunked prefill requires the paged cache "
+                             "(chunks carry between dispatches in the "
+                             "page pools)")
+        if chunked and not supports_chunked_prefill(cfg):
+            raise ValueError(
+                f"config {cfg.name!r} does not support chunked prefill "
+                "(SSM/RWKV state or mrope positions)")
+        self.chunked = chunked
 
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
@@ -121,6 +177,7 @@ class ServingEngine:
             self._slot_cache = self.kv.init_cache()
 
             def _prefill_into(p, batch, slot_cache, slot, pages):
+                self._traces["prefill"] += 1
                 logits, fresh = prefill(p, cfg, batch)
                 placed = place_prefill(slot_cache, fresh, slot, pages,
                                        layout=cfg.kv_cache_layout)
@@ -128,6 +185,8 @@ class ServingEngine:
                         placed)
 
             def _decode_n(p, tok, cache, table, pos, lengths):
+                self._traces["decode"] += 1
+
                 def tick(carry, _):
                     tok, cache, pos, lengths = carry
                     nt, _lg, cache = decode_step(p, cfg, tok, cache, pos,
@@ -142,12 +201,15 @@ class ServingEngine:
             self._slot_cache = init_cache(cfg, batch_slots, max_len)
 
             def _prefill_into(p, batch, slot_cache, slot):
+                self._traces["prefill"] += 1
                 logits, fresh = prefill(p, cfg, batch)
                 placed = _place_cache_slot(slot_cache, fresh, slot)
                 return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
                         placed)
 
             def _decode_n(p, tok, cache, pos, lengths):
+                self._traces["decode"] += 1
+
                 def tick(carry, _):
                     tok, cache, pos, lengths = carry
                     nt, _lg, cache = decode_step(p, cfg, tok, cache, pos,
@@ -163,6 +225,35 @@ class ServingEngine:
         self._prefill = jax.jit(_prefill_into, donate_argnums=(2,))
         self._decode = jax.jit(_decode_n, donate_argnums=(2,))
 
+        if self.chunked:
+            assert self.kv is not None
+            ps = self.kv.page_size
+            # Chunk size: the plan's prefill granule (attention block_q
+            # rounded up to whole pages), page-aligned when overridden,
+            # clamped to the slot's page-table extent.
+            want = (prefill_chunk if prefill_chunk is not None
+                    else (plan.prefill_chunk_size(ps) if plan is not None
+                          else 4 * ps))
+            want = cdiv(max(1, int(want)), ps) * ps
+            self.chunk = max(ps, min(want, self.kv.extent))
+            # Token budget of one scheduler pass: prefill chunks claim it
+            # first, the decode block runs regardless — so decode never
+            # starves, and at most budget/chunk prompts advance per pass.
+            self.sched_tokens = max(self.chunk,
+                                    self.slots * self.decode_block)
+
+            def _chunk_fwd(p, toks, slot_cache, row, cpages, off, last):
+                self._traces["prefill"] += 1
+                nt, _lg, placed = _model_prefill_chunk(
+                    p, cfg, toks, slot_cache, row, cpages, off, last)
+                return nt, placed
+
+            self._prefill_chunk = jax.jit(_chunk_fwd, donate_argnums=(2,))
+        else:
+            self.chunk = 0
+            self.sched_tokens = self.slots * self.decode_block
+            self._prefill_chunk = None
+
         # Reserved K/V bytes: pool size (paged) / worst-case slot rows
         # (contiguous) — the paged win is measured against bytes-IN-USE.
         self.kv_bytes_reserved = sum(
@@ -171,8 +262,12 @@ class ServingEngine:
             if cache_leaf_kind(cache_leaf_name(path)) == "kv")
         self.metrics: Dict[str, float] = {
             "dispatches": 0, "ticks": 0, "scan_ticks": 0, "generated": 0,
-            "prefills": 0, "decode_block": self.decode_block,
+            "prefills": 0, "prefill_chunks": 0, "rejected": 0,
+            "prefill_traces": 0, "decode_traces": 0,
+            "decode_block": self.decode_block,
             "paged": int(paged),
+            "chunked": int(self.chunked),
+            "prefill_chunk": self.chunk,
             "page_size": self.kv.page_size if self.kv else 0,
             "kv_bytes_reserved": self.kv_bytes_reserved,
             "kv_bytes_peak": 0,
@@ -188,38 +283,88 @@ class ServingEngine:
                 for i, p in enumerate(prompts)]
         pending = deque(reqs)
         active: List[Optional[Request]] = [None] * self.slots
+        decoding = [False] * self.slots     # False: idle or mid-prefill
         pos = np.zeros(self.slots, np.int32)        # == per-slot length
         tok = np.zeros((self.slots, 1), np.int32)
 
         while pending or any(r is not None for r in active):
-            self._admit_pending(pending, active, pos, tok)
+            self._admit_pending(pending, active, decoding, pos, tok)
             if not any(r is not None for r in active):
-                break                                # nothing admitted ran
-            self._decode_block(active, pos, tok)
+                break                               # nothing admitted ran
+            progressed = False
+            if self.chunked:
+                budget = self.sched_tokens
+                for s in range(self.slots):
+                    r = active[s]
+                    if r is None or decoding[s]:
+                        continue
+                    if progressed and budget < self.chunk:
+                        break       # budget spent; the rest wait a pass
+                    self._dispatch_chunk(s, r, active, decoding, pos, tok)
+                    budget -= self.chunk
+                    progressed = True
+            if any(active[s] is not None and decoding[s]
+                   for s in range(self.slots)):
+                self._decode_block(active, decoding, pos, tok)
+                progressed = True
+            if not progressed:                      # defensive: no work
+                break
         if self.kv is not None:
             self.metrics["kv_bytes_peak"] = max(
                 self.metrics["kv_bytes_peak"], self.kv.peak_bytes_in_use)
         else:
             self.metrics["kv_bytes_peak"] = self.kv_bytes_reserved
+        self.metrics["prefill_traces"] = self._traces["prefill"]
+        self.metrics["decode_traces"] = self._traces["decode"]
         return reqs
 
     # ------------------------------------------------------- scheduling
-    def _admit_pending(self, pending, active, pos, tok) -> None:
-        """Fill every free slot from the queue — called between decode
-        dispatches, so requests join mid-stream."""
+    def _validate(self, r: Request) -> Optional[str]:
+        """Admission check: a bad prompt must fail HERE, not mid-dispatch
+        where it would strand every active request with its pages held."""
+        plen = int(r.prompt.shape[0]) if r.prompt.ndim >= 1 else 0
+        if plen == 0:
+            return "empty prompt"
+        if plen > self.max_len:
+            return f"prompt length {plen} exceeds max_len {self.max_len}"
+        return None
+
+    def _admit_pending(self, pending, active, decoding, pos, tok) -> None:
+        """Fill every free slot from the queue — called between dispatches,
+        so requests join mid-stream.  Invalid prompts are marked failed and
+        skipped; the engine keeps serving.  Chunked mode only ASSIGNS the
+        slot (prefill work is scheduled chunk-by-chunk); the fallback path
+        prefills the whole prompt at its own length, as before."""
         for s in range(self.slots):
             while active[s] is None and pending:
                 r = pending.popleft()
+                err = self._validate(r)
+                if err is not None:
+                    r.failed = True
+                    r.error = err
+                    r.done = True
+                    r.finished_at = time.perf_counter()
+                    self.metrics["rejected"] += 1
+                    continue
+                if self.chunked:
+                    r.prefill_pos = 0
+                    active[s] = r
+                    decoding[s] = False
+                    continue
                 self._admit(s, r, pos, tok)
                 if (len(r.out_tokens) >= r.max_new_tokens
                         or pos[s] >= self.max_len):
-                    self._retire(s, r, active, pos, tok)  # prefill-only
+                    self._retire(s, r, active, decoding, pos, tok)
                 else:
                     active[s] = r
+                    decoding[s] = True
 
     def _admit(self, slot: int, r: Request, pos, tok) -> None:
+        """Whole-prompt prefill at the request's own length (fallback path:
+        contiguous cache, or SSM/RWKV/mrope configs).  Compiles once per
+        distinct prompt length."""
         plen = int(r.prompt.shape[0])
-        if plen > self.max_len:
+        if plen > self.max_len:                     # guarded by _validate
             raise ValueError(
                 f"prompt length {plen} exceeds max_len {self.max_len}")
         batch = {"tokens": jnp.asarray(r.prompt)[None]}
@@ -238,36 +383,86 @@ class ServingEngine:
         t = int(np.asarray(next_tok)[0, 0])
         r.out_tokens.append(t)
         r.first_token_at = time.perf_counter()
+        r.prefill_pos = plen
         pos[slot] = plen
         tok[slot, 0] = t
         self.metrics["prefills"] += 1
         self.metrics["generated"] += 1
 
-    def _retire(self, slot: int, r: Request, active, pos, tok) -> None:
+    def _dispatch_chunk(self, slot: int, r: Request, active, decoding,
+                        pos, tok) -> None:
+        """One fixed-size prefill chunk through the single compiled
+        ``prefill_chunk`` program; the final chunk emits the first token
+        and flips the slot to decoding."""
+        assert self.kv is not None and self._prefill_chunk is not None
+        c = self.chunk
+        plen = int(r.prompt.shape[0])
+        off = r.prefill_pos
+        # Pages for the chunk's span (page-aligned by construction); the
+        # portion of a final chunk past max_len maps to the NULL page.
+        self.kv.ensure(slot, min(off + c, self.max_len))
+        row = self.kv.table_row(slot)
+        toks, cpages, last = stage_chunk(r.prompt, off, c, row,
+                                         self.kv.page_size)
+        next_tok, cache = self._prefill_chunk(
+            self.params, jnp.asarray(toks)[None], self._slot_cache,
+            jnp.asarray(row), jnp.asarray(cpages), jnp.int32(off),
+            jnp.int32(last))
+        self._slot_cache = cache
+        r.prefill_pos = min(off + c, plen)
+        self.metrics["prefill_chunks"] += 1
+        if r.prefill_pos < plen:
+            return                                  # more chunks to go
+        t = int(np.asarray(next_tok)[0, 0])
+        r.out_tokens.append(t)
+        r.first_token_at = time.perf_counter()
+        pos[slot] = plen
+        tok[slot, 0] = t
+        decoding[slot] = True
+        self.metrics["prefills"] += 1
+        self.metrics["generated"] += 1
+        if (len(r.out_tokens) >= r.max_new_tokens
+                or pos[slot] >= self.max_len):
+            self._retire(slot, r, active, decoding, pos, tok)
+
+    def _retire(self, slot: int, r: Request, active, decoding, pos,
+                tok) -> None:
         r.done = True
         r.finished_at = time.perf_counter()
         active[slot] = None
+        decoding[slot] = False
         pos[slot] = 0
         tok[slot, 0] = 0
         if self.kv is not None:
             self.kv.release(slot)
 
-    def _decode_block(self, active, pos, tok) -> None:
+    def _decode_block(self, active, decoding, pos, tok) -> None:
         """One jitted dispatch: ``decode_block`` scan ticks across all
         slots, each at its own position; harvest real tokens after."""
+        runnable = [s for s in range(self.slots)
+                    if active[s] is not None and decoding[s]]
         if self.kv is not None:
-            for s, r in enumerate(active):
-                if r is not None:
-                    # Allocate only what the request's remaining budget can
-                    # validly read back: scan ticks past the budget write
-                    # into unallocated positions, which route to the NULL
-                    # page, and their outputs are discarded below.
-                    h = min(self.decode_block,
-                            r.max_new_tokens - len(r.out_tokens))
-                    self.kv.ensure(s, min(int(pos[s]) + h, self.max_len))
+            for s in runnable:
+                r = active[s]
+                # Allocate only what the request's remaining budget can
+                # validly read back: scan ticks past the budget write
+                # into unallocated positions, which route to the NULL
+                # page, and their outputs are discarded below.
+                h = min(self.decode_block,
+                        r.max_new_tokens - len(r.out_tokens))
+                self.kv.ensure(s, min(int(pos[s]) + h, self.max_len))
+            # Idle slots AND slots parked mid-prefill ride along with
+            # their write position at the table extent: paged_append
+            # routes those writes to the NULL page, so a half-prefilled
+            # slot's pages survive the decode blocks between its chunks.
+            dpos = np.full(self.slots, self.kv.extent, np.int32)
+            dlen = np.zeros(self.slots, np.int32)
+            for s in runnable:
+                dpos[s] = pos[s]
+                dlen[s] = pos[s]
             next_tok, cache, toks = self._decode(
                 self.params, jnp.asarray(tok), self._slot_cache,
-                self.kv.page_table, jnp.asarray(pos), jnp.asarray(pos))
+                self.kv.page_table, jnp.asarray(dpos), jnp.asarray(dlen))
         else:
             next_tok, cache, toks = self._decode(
                 self.params, jnp.asarray(tok), self._slot_cache,
@@ -276,9 +471,8 @@ class ServingEngine:
         toks_np = np.asarray(toks)                   # [N, slots]
         last_np = np.asarray(next_tok)               # [slots, 1]
         useful = 0
-        for s, r in enumerate(list(active)):
-            if r is None:
-                continue
+        for s in runnable:
+            r = active[s]
             h = min(self.decode_block,
                     r.max_new_tokens - len(r.out_tokens),
                     self.max_len - int(pos[s]))
@@ -289,7 +483,7 @@ class ServingEngine:
             tok[s, 0] = last_np[s, 0]
             if (len(r.out_tokens) >= r.max_new_tokens
                     or pos[s] >= self.max_len):
-                self._retire(s, r, active, pos, tok)
+                self._retire(s, r, active, decoding, pos, tok)
         self.metrics["dispatches"] += 1
         self.metrics["ticks"] += useful
         self.metrics["scan_ticks"] += self.decode_block

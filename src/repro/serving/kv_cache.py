@@ -77,17 +77,23 @@ def paged_append(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
 
     pool: [P, page_size, H, hd]; page_table: [B, max_pages] int32;
     pos: [B] absolute write positions; new: [B, 1, H, hd] ("bshd") or
-    [B, H, 1, hd] ("bhsd").  Positions are clamped to the table's extent
-    (a slot at capacity rewrites its last row; the engine retires it) and
-    unallocated entries resolve to the NULL page, so the scatter is always
-    in bounds.
+    [B, H, 1, hd] ("bhsd").  Unallocated table entries resolve to the NULL
+    page, and a position at/past the table's extent routes to the NULL
+    page too — an over-run scan tick (or a slot deliberately parked past
+    capacity while it is still prefilling) lands in the sacrificial page
+    instead of silently rewriting the slot's last real KV row.  The
+    scatter is therefore always in bounds and never corrupts live data.
     """
     page_size = pool.shape[1]
     b = page_table.shape[0]
     tok = to_page_major(new, layout)[:, 0]                 # [B, H, hd]
-    pos = jnp.clip(pos, 0, page_table.shape[1] * page_size - 1)
-    phys = page_table[jnp.arange(b), pos // page_size]     # [B]
-    return pool.at[phys, pos % page_size].set(tok.astype(pool.dtype))
+    extent = page_table.shape[1] * page_size
+    in_range = jnp.logical_and(pos >= 0, pos < extent)
+    posc = jnp.clip(pos, 0, extent - 1)
+    phys = jnp.where(in_range,
+                     page_table[jnp.arange(b), posc // page_size],
+                     NULL_PAGE)                            # [B]
+    return pool.at[phys, posc % page_size].set(tok.astype(pool.dtype))
 
 
 def gather_pages(pool: jax.Array, page_table: jax.Array, *,
@@ -133,6 +139,52 @@ def place_prefill(cache: Tree, fresh: Tree, slot: jax.Array,
         return pool.at[:, pages].set(chunks.astype(pool.dtype))
 
     return jax.tree_util.tree_map_with_path(place, cache, fresh)
+
+
+def place_chunk_pages(pool: jax.Array, seq: jax.Array,
+                      chunk_pages: jax.Array, *, layout: str) -> jax.Array:
+    """Page-aligned incremental prefill placement: write ONE chunk's K/V
+    into its physical pages.
+
+    pool: [P, page_size, H, hd]; seq: a batch-1 chunk [1, C, H, hd]
+    ("bshd") or [1, H, C, hd] ("bhsd"); chunk_pages: [C // page_size]
+    int32 physical page ids for the chunk's logical pages.  The chunk size
+    is a whole multiple of the page size by construction (the engine
+    aligns the chunk grid to the page grid), so the write is a whole-page
+    scatter — no read-modify-write of partially-filled pages.  Entries of
+    ``chunk_pages`` past the slot's capacity carry the NULL page and land
+    in the sacrificial page (pad tokens of the final chunk).  Runs inside
+    a donated jit: the scatter updates the pool in place.
+    """
+    page_size = pool.shape[1]
+    x = to_page_major(seq, layout)[0]                      # [C, H, hd]
+    c, h, hd = x.shape
+    chunks = x.reshape(c // page_size, page_size, h, hd)
+    return pool.at[chunk_pages].set(chunks.astype(pool.dtype))
+
+
+def stage_chunk(prompt: np.ndarray, off: int, chunk: int,
+                row: np.ndarray, page_size: int):
+    """Host-side staging of one prefill chunk for ``prefill_chunk``.
+
+    prompt: [S] tokens; off: chunk start (a multiple of ``chunk``); row:
+    the slot's page-table row (after ``ensure``); returns ``(tokens
+    [chunk] zero-padded past the prompt, chunk_pages [chunk // page_size]
+    physical ids with NULL past the table extent, last_idx)`` where
+    ``last_idx`` is the within-chunk index of the prompt's final real
+    token (clamped; only meaningful on the final chunk).  Shared by the
+    engine and the tests so the staging contract lives in one place.
+    """
+    n_cp = chunk // page_size
+    j0 = off // page_size
+    cpages = np.full(n_cp, NULL_PAGE, np.int32)
+    n = max(0, min(n_cp, int(row.shape[0]) - j0))
+    cpages[:n] = row[j0:j0 + n]
+    toks = np.zeros(chunk, np.int32)
+    seg = prompt[off:off + chunk]
+    toks[:len(seg)] = seg
+    last = min(int(prompt.shape[0]) - 1 - off, chunk - 1)
+    return toks, cpages, last
 
 
 # --------------------------------------------------------------------- #
@@ -220,6 +272,16 @@ class PagedKVCache:
 
     def slot_pages(self, slot: int) -> np.ndarray:
         return np.asarray(self._owned[slot], np.int32)
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """One slot's logical->physical page map (unallocated: NULL)."""
+        return self._table[slot].copy()
+
+    @property
+    def extent(self) -> int:
+        """Positions addressable through the table (>= max_len; a write at
+        or past this routes to the NULL page in ``paged_append``)."""
+        return self.pages_per_slot * self.page_size
 
     # ------------------------------------------------------- allocation
     def ensure(self, slot: int, length: int) -> np.ndarray:

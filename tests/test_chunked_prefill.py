@@ -1,0 +1,249 @@
+"""Chunked prefill: one compiled program for any prompt-length mix.
+
+Four layers of coverage:
+
+  * Model-level equivalence — ``prefill_chunk`` driven chunk-by-chunk
+    over the paged pools matches whole-prompt ``prefill`` (logits at the
+    last real token, the emitted token, and every K/V row) for BOTH
+    cache layouts, to 1e-6 under f32 compute.
+  * Compile-count — a mixed burst of >= 4 distinct prompt lengths
+    through the engine compiles exactly ONE prefill program and ONE
+    decode program (counted by the engine's trace-time probe), while
+    every request still bit-matches its serial per-request reference.
+  * Chunk-size provenance — the chunk is a whole multiple of the KV page
+    size, derived from the StreamPlan's attention query tile.
+  * Admission contract — empty / over-long prompts are failed at
+    admission (no slot, no pages, engine keeps serving) and the latency
+    properties of never-served requests report ``nan`` instead of
+    negative garbage.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (init_params, prefill, prefill_chunk, resolve_plan,
+                          supports_chunked_prefill)
+from repro.serving import PagedKVCache, Request, ServingEngine, gather_pages
+from repro.serving.kv_cache import stage_chunk
+
+from test_paged_serving import _serial_reference
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def _cfg(arch="qwen1.5-0.5b", **over):
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _run_chunked(cfg, params, prompt, kv, slot, chunk):
+    """Drive ``prefill_chunk`` over a prompt the way the engine does:
+    fixed-size page-aligned chunks, NULL pages past capacity, one jitted
+    program.  Returns (next_tok, last_logits, cache)."""
+    ps = kv.page_size
+    assert chunk % ps == 0
+    plen = int(prompt.shape[0])
+    cache = kv.init_cache()
+    step = jax.jit(
+        lambda p, t, c, row, cp, off, li: prefill_chunk(
+            p, cfg, t, c, row, cp, off, li),
+        donate_argnums=(2,))
+    nt = lg = None
+    for k in range(-(-plen // chunk)):
+        off = k * chunk
+        kv.ensure(slot, min(off + chunk, kv.max_len))
+        row = kv.table_row(slot)
+        toks, cpages, last = stage_chunk(prompt, off, chunk, row, ps)
+        nt, lg, cache = step(params, jnp.asarray(toks)[None], cache,
+                             jnp.asarray(row), jnp.asarray(cpages),
+                             jnp.int32(off), jnp.int32(last))
+    return nt, lg, cache
+
+
+# --------------------------------------------------- gating / provenance
+
+def test_supports_chunked_prefill_gating():
+    assert supports_chunked_prefill(_cfg())                  # attention
+    assert supports_chunked_prefill(_cfg("llama3-8b"))       # GQA
+    assert not supports_chunked_prefill(_cfg("zamba2-2.7b"))  # hybrid SSM
+    assert not supports_chunked_prefill(_cfg("rwkv6-7b"))     # recurrent
+    assert not supports_chunked_prefill(_cfg("qwen2-vl-2b"))  # mrope
+
+
+def test_chunk_size_is_plan_derived_page_multiple():
+    fused = _cfg("llama3-8b", use_fused_kernels=True)
+    plan = resolve_plan(fused, 2, kv_len=64)
+    ps = plan.decode_page_size(16)
+    chunk = plan.prefill_chunk_size(ps)
+    assert chunk % ps == 0
+    # The chunk covers the attention query tile the DSE chose.
+    bq = plan.layer("attn").attention.kw.get("block_q", 128)
+    assert chunk >= bq
+    assert plan.prefill_chunk_size(ps) - bq < ps    # tight rounding
+
+
+def test_engine_chunk_is_page_aligned(rng):
+    cfg = _cfg()
+    params = init_params(rng, cfg)
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=48,
+                        decode_block=4, page_size=8)
+    assert eng.chunked and eng.chunk % eng.kv.page_size == 0
+    assert eng.chunk <= eng.kv.extent
+    # Explicit override is rounded up to the page grid.
+    eng2 = ServingEngine(cfg, params, batch_slots=2, max_len=48,
+                         decode_block=4, page_size=8, prefill_chunk=12)
+    assert eng2.chunk == 16
+    with pytest.raises(ValueError, match="requires the paged cache"):
+        ServingEngine(cfg, params, batch_slots=2, max_len=48,
+                      paged=False, chunked=True)
+    with pytest.raises(ValueError, match="does not support"):
+        ServingEngine(_cfg("rwkv6-7b"), None, batch_slots=2, max_len=48,
+                      chunked=True)
+
+
+# ------------------------------------------------- model-level equality
+
+@pytest.mark.parametrize("layout", ["bshd", "bhsd"])
+def test_chunked_matches_whole_prefill(rng, layout):
+    """Chunked prefill == whole-prompt prefill to 1e-6 (f32 compute) for
+    both cache layouts: last-token logits, emitted token, and every K/V
+    row read back through the page indirection."""
+    cfg = _cfg(dtype="float32", kv_cache_layout=layout)
+    params = init_params(rng, cfg)
+    plen, chunk, ps, max_len = 13, 8, 4, 24    # final chunk partial
+    prompt = np.random.default_rng(1).integers(
+        1, cfg.vocab_size, plen).astype(np.int32)
+    kv = PagedKVCache(cfg, slots=2, max_len=max_len, page_size=ps)
+    slot = 1
+    nt, lg, cache = _run_chunked(cfg, params, prompt, kv, slot, chunk)
+
+    whole_lg, fresh = jax.jit(lambda p, b: prefill(p, cfg, b))(
+        params, {"tokens": jnp.asarray(prompt)[None]})
+    assert int(np.asarray(nt)[0, 0]) == int(jnp.argmax(whole_lg, -1)[0, 0])
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(whole_lg),
+                               atol=1e-6)
+    table = kv.page_table
+    for leaf in ("k", "v"):
+        big = cache["blocks"][0][leaf]
+        small = fresh["blocks"][0][leaf]
+        for g in range(big.shape[0]):
+            seq = gather_pages(big[g], table[slot][None], layout=layout)[0]
+            want = small[g, 0]
+            if layout == "bhsd":
+                seq = jnp.swapaxes(seq, 0, 1)
+                want = jnp.swapaxes(want, 0, 1)
+            np.testing.assert_allclose(
+                np.asarray(seq[:plen], np.float32),
+                np.asarray(want.astype(big.dtype), np.float32), atol=1e-6)
+
+
+# --------------------------------------------------- engine compile count
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", ["bshd", "bhsd"])
+def test_engine_one_program_for_mixed_burst(rng, layout):
+    """>= 4 distinct prompt lengths in one burst: exactly one compiled
+    prefill program (plus one decode program), multi-chunk prompts
+    interleaved with running decodes, and every request identical to its
+    serial whole-prompt reference."""
+    cfg = _cfg(kv_cache_layout=layout)
+    params = init_params(rng, cfg)
+    nprng = np.random.default_rng(7)
+    plens = (5, 9, 12, 16, 23, 31)            # 6 distinct lengths
+    prompts = [nprng.integers(1, cfg.vocab_size, n, dtype=np.int32)
+               for n in plens]
+    new_tokens, max_len = 10, 48
+    refs = [_serial_reference(cfg, params, p, new_tokens, max_len)
+            for p in prompts]
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=max_len,
+                        decode_block=8, page_size=8, prefill_chunk=8)
+    assert eng.chunk == 8
+    reqs = eng.generate(prompts, max_new_tokens=new_tokens)
+    for r, ref in zip(reqs, refs):
+        assert r.out_tokens == ref, f"request {r.rid} diverged"
+    m = eng.metrics
+    assert m["chunked"] == 1
+    assert m["prefill_traces"] == 1, "prefill compile count must be " \
+        "independent of the prompt-length mix"
+    assert m["decode_traces"] == 1
+    assert m["prefills"] == len(prompts)
+    # 8-token chunks: ceil(plen/8) chunks per prompt.
+    assert m["prefill_chunks"] == sum(-(-n // 8) for n in plens)
+    assert eng.kv.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_fallback_configs_still_serve(rng):
+    """A config outside the chunked gate (hybrid SSM state) falls back to
+    whole-prompt prefill on the same scheduler, one compile per distinct
+    length."""
+    cfg = _cfg("zamba2-2.7b")
+    params = init_params(rng, cfg)
+    nprng = np.random.default_rng(8)
+    prompts = [nprng.integers(1, cfg.vocab_size, n, dtype=np.int32)
+               for n in (6, 10)]
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=32,
+                        decode_block=4)
+    reqs = eng.generate(prompts, max_new_tokens=4)
+    assert all(r.done and not r.failed for r in reqs)
+    assert eng.metrics["chunked"] == 0
+    assert eng.metrics["prefill_traces"] == 2     # one per distinct length
+
+
+# ------------------------------------------------- admission / metrics
+
+@pytest.mark.slow
+def test_bad_prompts_fail_at_admission_and_engine_keeps_serving(rng):
+    """An empty or over-long prompt is failed at admission — it takes no
+    slot and no pages, and every valid request still completes and
+    matches its serial reference (the old behavior raised mid-generate,
+    stranding all active requests with their pages held)."""
+    cfg = _cfg()
+    params = init_params(rng, cfg)
+    nprng = np.random.default_rng(9)
+    max_len, new_tokens = 32, 6
+    good = [nprng.integers(1, cfg.vocab_size, n, dtype=np.int32)
+            for n in (7, 12)]
+    prompts = [good[0],
+               np.zeros(0, np.int32),                        # empty
+               nprng.integers(1, cfg.vocab_size, max_len + 1,
+                              dtype=np.int32),               # over-long
+               good[1]]
+    refs = [_serial_reference(cfg, params, p, new_tokens, max_len)
+            for p in good]
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=max_len,
+                        decode_block=4)
+    reqs = eng.generate(prompts, max_new_tokens=new_tokens)
+    assert reqs[0].out_tokens == refs[0]
+    assert reqs[3].out_tokens == refs[1]
+    for bad, why in ((reqs[1], "empty"), (reqs[2], "exceeds max_len")):
+        assert bad.failed and bad.done and why in bad.error
+        assert bad.out_tokens == []
+        assert math.isnan(bad.ttft_s)
+        assert bad.latency_s >= 0                 # failed AT a real time
+    assert eng.metrics["rejected"] == 2
+    assert eng.kv.pages_in_use == 0               # nothing leaked
+
+
+def test_latency_properties_guard_unset_timestamps():
+    """ttft_s / latency_s used to return negative garbage for requests
+    that were never admitted (timestamps default 0.0) — they must report
+    nan until the underlying events exist."""
+    r = Request(rid=0, prompt=np.zeros(3, np.int32))
+    assert math.isnan(r.ttft_s) and math.isnan(r.latency_s)
+    r.submitted_at = 100.0
+    assert math.isnan(r.ttft_s) and math.isnan(r.latency_s)
+    r.first_token_at = 100.5
+    assert r.ttft_s == pytest.approx(0.5)
+    assert math.isnan(r.latency_s)
+    r.finished_at = 101.0
+    assert r.latency_s == pytest.approx(1.0)

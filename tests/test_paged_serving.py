@@ -105,6 +105,39 @@ def test_append_gather_round_trip(layout):
     np.testing.assert_array_equal(np.asarray(pool[NULL_PAGE]), 0.0)
 
 
+@pytest.mark.parametrize("layout", ["bshd", "bhsd"])
+def test_paged_append_overrun_routes_to_null(layout):
+    """Regression: writes at/past the table's extent used to clamp onto
+    the slot's LAST REAL KV row (silently overwriting it); they must land
+    in the NULL page.  Simulates an over-run decode block: fill a slot to
+    capacity, then keep appending past it — the final page's contents
+    survive."""
+    ps, n_pages, h, hd, b = 4, 2, 2, 8, 1
+    extent = ps * n_pages
+    pool = jnp.zeros((1 + n_pages, ps, h, hd), jnp.float32)
+    table = jnp.asarray([[1, 2]], np.int32)
+    nprng = np.random.default_rng(11)
+    toks = nprng.normal(size=(extent, b, h, hd)).astype(np.float32)
+
+    def to_layout(a):
+        new = jnp.asarray(a)[:, None]                     # [B, 1, H, hd]
+        return new.transpose(0, 2, 1, 3) if layout == "bhsd" else new
+
+    for t in range(extent):
+        pool = paged_append(pool, table, jnp.full((b,), t, jnp.int32),
+                            to_layout(toks[t]), layout=layout)
+    filled = np.asarray(pool)
+    # Over-run ticks: positions extent .. extent+2 (as a scan running past
+    # max_len does) write junk that must not touch the slot's pages.
+    for t in range(extent, extent + 3):
+        pool = paged_append(pool, table, jnp.full((b,), t, jnp.int32),
+                            to_layout(np.full((b, h, hd), 7.0, np.float32)),
+                            layout=layout)
+    after = np.asarray(pool)
+    np.testing.assert_array_equal(after[1:], filled[1:])   # pages intact
+    assert np.any(after[NULL_PAGE] == 7.0)                 # junk sunk
+
+
 def test_place_prefill_round_trip(rng):
     """A batch-1 prefill cache placed into pages gathers back exactly,
     and state leaves land in the slot row."""
