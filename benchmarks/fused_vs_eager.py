@@ -16,6 +16,12 @@ Measures the three model entry points under both execution paths:
     aggregate TTFT and the prefill compile count (the engine's
     trace-time probe).  The compile storm is the cost being measured, so
     no warmup run precedes the burst.
+  * sharded decode    — the mesh-aware StreamPlan (DESIGN.md §9): the
+    fused engine on a (2, 4) ('data', 'model') mesh vs single-device,
+    tokens/s plus KV bytes PER SHARD (the pools split over kv_heads) and
+    a greedy-token equality check.  Needs >= 8 (forced) devices — run
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+    ``sharded`` job does); skipped gracefully otherwise.
 
 Run on CPU the Pallas kernels execute in *interpret mode* (the kernel body
 runs in Python per grid step), so fused numbers here validate the dispatch
@@ -60,6 +66,51 @@ def _timed(fn: Callable[[], Any], iters: int) -> float:
         jax.block_until_ready(fn())
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
+
+
+def bench_sharded_decode(base, *, batch: int, max_len: int,
+                         decode_block: int, new_tokens: int) -> Dict[str, Any]:
+    """Sharded vs single-device fused decode through the serving engine.
+
+    Uses a head layout whose kv_heads divide the 4-way model axis (the
+    reduced configs' GQA ratio often doesn't) so the KV pools actually
+    split; reports per-shard KV bytes — the number that scales capacity.
+    """
+    if len(jax.devices()) < 8:
+        return {"skipped": "needs 8 (forced) host devices — run under "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8"}
+    from repro.launch.mesh import make_mesh
+    cfg = dataclasses.replace(base, use_fused_kernels=True, num_heads=8,
+                              num_kv_heads=4, head_dim=8)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    nprng = np.random.default_rng(5)
+    prompts = [nprng.integers(1, cfg.vocab_size, n, dtype=np.int32)
+               for n in (max_len // 2, max_len // 4)][:batch]
+    out: Dict[str, Any] = {}
+    tokens = {}
+    for name, mesh in (("single", None),
+                       ("sharded", make_mesh((2, 4), ("data", "model")))):
+        eng = ServingEngine(cfg, params, batch_slots=batch, max_len=max_len,
+                            decode_block=decode_block, mesh=mesh)
+        eng.generate(prompts, max_new_tokens=2)      # compile
+        t0 = time.perf_counter()
+        reqs = eng.generate(prompts, max_new_tokens=new_tokens)
+        wall = time.perf_counter() - t0
+        generated = sum(len(r.out_tokens) for r in reqs)
+        tokens[name] = [r.out_tokens for r in reqs]
+        out[name] = {
+            "decode_s": wall,
+            "decode_tokens_per_s": generated / wall,
+            "kv_shards": eng.metrics["kv_shards"],
+            "kv_bytes_peak": eng.metrics["kv_bytes_peak"],
+            "kv_bytes_peak_per_shard": eng.kv.peak_bytes_per_shard,
+        }
+        if mesh is not None:
+            out[name]["plan_sharding"] = eng.plan.summary()["sharding"]
+    out["tokens_equal"] = tokens["single"] == tokens["sharded"]
+    out["interpret_mode"] = interpret_default()
+    return out
 
 
 def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
@@ -184,6 +235,9 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     result["loss_abs_diff"] = abs(losses["eager"] - losses["fused"])
     result["fused_over_eager_train"] = (result["fused"]["train_s"]
                                         / result["eager"]["train_s"])
+    result["sharded_decode"] = bench_sharded_decode(
+        base, batch=batch, max_len=max_len, decode_block=decode_block,
+        new_tokens=new_tokens)
     return result
 
 
@@ -220,13 +274,22 @@ def main(argv=None) -> int:
                 f"burst ttft {pb['per_length']['ttft_mean_s']*1e3:.0f}ms "
                 f"({pb['per_length']['prefill_compiles']} compiles, "
                 "no chunked support)")
+        sd = r["sharded_decode"]
+        if "skipped" in sd:
+            shard_note = "sharded decode skipped (<8 devices)"
+        else:
+            shard_note = (
+                f"sharded {sd['sharded']['decode_tokens_per_s']:.1f} tok/s "
+                f"x{sd['sharded']['kv_shards']} shards "
+                f"({sd['sharded']['kv_bytes_peak_per_shard']} B/shard, "
+                f"tokens_equal={sd['tokens_equal']})")
         print(f"{r['arch']}: train {e['train_s']*1e3:.1f}ms eager / "
               f"{f['train_s']*1e3:.1f}ms fused | decode "
               f"{e['decode_tokens_per_s']:.1f} vs "
               f"{f['decode_tokens_per_s']:.1f} tok/s | "
               f"kv peak {dc['paged']['kv_bytes_peak']} paged / "
               f"{dc['contiguous']['kv_bytes_peak']} contiguous bytes | "
-              f"{burst_note} | "
+              f"{burst_note} | {shard_note} | "
               f"loss diff {r['loss_abs_diff']:.2e}", flush=True)
 
     with open(args.out, "w") as fh:

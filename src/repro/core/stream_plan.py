@@ -40,12 +40,22 @@ paper's FPGA fabric (16..256); TPU Pallas kernels want MXU/lane-aligned
 tiles, so plan blocks are ``max(dse_tile, 128)`` used as *targets* — every
 kernel wrapper clips to the largest aligned divisor of the actual extent
 (``kernels/common.pick_block``), which also keeps smoke-sized shapes legal.
+
+Sharding dimension (DESIGN.md §9): built against a mesh, the plan also
+decides, per stage, which mesh axes the kernel's block grid shards over —
+derived from the same logical-axis rules the parameter shardings use
+(``distributed/sharding.spec_for``), with the same quantum-aware
+divisibility fallbacks to replication (never to eager).  The decision is
+recorded on each ``KernelChoice`` as ``sharding`` — (grid_dim, mesh_axis)
+claims the fused wrappers in ``models/layers.py`` turn into ``shard_map``
+specs — and feature-dim block targets are clipped to the *post-shard*
+extents so DSE tiles reflect what one shard actually streams.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 from ..configs.base import ModelConfig
@@ -59,22 +69,30 @@ from .trace import trace_lm_head
 LANE = 128      # TPU vreg lane width: Pallas block-size floor
 
 Blocks = Tuple[Tuple[str, int], ...]
+# (grid_dim, mesh_axis_or_group) claims — the value is a single axis name
+# or a tuple of names (batch over ('pod', 'data') on a multi-pod mesh).
+Sharding = Tuple[Tuple[str, object], ...]
 
 
 @dataclass(frozen=True)
 class KernelChoice:
-    """One stage's implementation + Pallas block-size targets."""
+    """One stage's implementation + Pallas block-size targets + the mesh
+    axes its block grid shards over (empty = replicate / single-device)."""
     implementation: str          # kernel name in repro.kernels, or "eager"
     blocks: Blocks = ()
+    sharding: Sharding = ()
 
     @property
     def fused(self) -> bool:
         return self.implementation != "eager"
 
     @property
-    def kw(self) -> Dict[str, int]:
-        """Block sizes as kwargs for the kernel wrapper."""
-        return dict(self.blocks)
+    def kw(self) -> Dict[str, object]:
+        """Block sizes (plus the sharding claim) as wrapper kwargs."""
+        d: Dict[str, object] = dict(self.blocks)
+        if self.sharding:
+            d["shard"] = self.sharding
+        return d
 
 
 EAGER = KernelChoice("eager")
@@ -111,6 +129,7 @@ class StreamPlan:
     modeled_latency_s: float = 0.0
     fusion_groups: int = 0
     implementations: Tuple[str, ...] = ()
+    mesh_axes: Tuple[Tuple[str, int], ...] = ()   # mesh the plan targets
 
     def layer(self, kind: str) -> LayerPlan:
         for k, lp in self.layers:
@@ -153,6 +172,7 @@ class StreamPlan:
             "unroll": self.overall_unroll_size,
             "fusion_groups": self.fusion_groups,
             "modeled_latency_s": self.modeled_latency_s,
+            "mesh": dict(self.mesh_axes),
             "stages": {
                 kind: {"qkv": lp.qkv.implementation,
                        "attention": lp.attention.implementation,
@@ -161,7 +181,15 @@ class StreamPlan:
                        "mixer": lp.mixer.implementation}
                 for kind, lp in self.layers
             },
+            "sharding": {
+                kind: {stage: dict(getattr(lp, stage).sharding)
+                       for stage in ("qkv", "attention", "decode_attn",
+                                     "ffn", "mixer")
+                       if getattr(lp, stage).sharding}
+                for kind, lp in self.layers
+            },
             "lm_head": self.lm_head.implementation,
+            "lm_head_sharding": dict(self.lm_head.sharding),
         }
 
 
@@ -281,16 +309,142 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
                      decode_attn=decode_attn, ffn=ffn, mixer=mixer)
 
 
+# ------------------------------------------------------------- sharding
+
+def _mesh_claims(cfg: ModelConfig, mesh) -> Dict[str, Sharding]:
+    """Per-stage (grid_dim, mesh_axis) claims for one mesh.
+
+    Feature dims go through ``distributed/sharding.spec_for`` — the SAME
+    quantum-aware rules that shard the parameters, so a kernel's block
+    grid never disagrees with its operands' layout (e.g. ``kv_heads``
+    claims 'model' only when the head count divides; otherwise the claim
+    is dropped and the stage replicates, never falls back to eager).
+    Token/batch dims claim 'data' here and are divisibility-checked at
+    trace time by the wrappers, where the actual batch extent is known.
+    """
+    # Deliberately lazy: core must stay importable without triggering the
+    # distributed package (which imports models, which imports core).
+    from ..distributed.sharding import spec_for
+
+    def claim(name: str, extent: int) -> Optional[str]:
+        if extent <= 0:
+            return None
+        ax = spec_for(cfg, (name,), (extent,), mesh)[0]
+        if not isinstance(ax, str) or mesh.shape[ax] <= 1:
+            return None              # size-1 axis: sharding is a no-op
+        return ax
+
+    def pairs(**dims) -> Sharding:
+        return tuple((d, ax) for d, ax in dims.items() if ax)
+
+    # Batch/token claim: the same ('pod', 'data') candidate group the
+    # ``batch`` rule uses, narrowed to axes this mesh actually has — so
+    # fused in_specs agree with the input placement on multi-pod meshes.
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if a in mesh.axis_names and mesh.shape[a] > 1)
+    data = (batch_axes if len(batch_axes) > 1
+            else (batch_axes[0] if batch_axes else None))
+    out_ax = None
+    if (claim("q_dim", cfg.q_dim) == "model"
+            and claim("kv_dim", cfg.kv_dim) == "model"):
+        out_ax = "model"          # one choice serves wq/wk/wv: need both
+    kv_heads = claim("kv_heads", cfg.num_kv_heads)
+    if cfg.is_moe:
+        ffn = pairs(tokens=data, experts=claim("experts", cfg.num_experts))
+    else:
+        ffn = pairs(tokens=data, d_ff=claim("d_ff", cfg.d_ff))
+    mixer: Sharding = ()
+    if cfg.is_mamba:
+        mixer = pairs(batch=data, heads=claim("ssm_heads", cfg.ssm_heads))
+    elif cfg.rwkv:
+        mixer = pairs(batch=data, heads=claim("rwkv_heads", cfg.rwkv_heads))
+    return {
+        "qkv": pairs(tokens=data, out=out_ax),
+        "attention": pairs(batch=data, kv_heads=kv_heads),
+        "decode_attn": pairs(batch=data, kv_heads=kv_heads),
+        "ffn": ffn,
+        "mixer": mixer,
+        "lm_head": pairs(tokens=data),
+    }
+
+
+def _axis_size(mesh, sharding: Sharding, dim: str) -> int:
+    ax = dict(sharding).get(dim)
+    if not ax:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return size
+
+
+def _shard_choice(choice: KernelChoice, sharding: Sharding,
+                  clips: Dict[str, int]) -> KernelChoice:
+    """Attach a sharding claim; clip block targets to post-shard extents
+    (``clips``: block name -> per-shard extent) so the plan's DSE tiles
+    describe what ONE shard streams, not the global tensor."""
+    if not choice.fused:
+        return choice
+    blocks = tuple(
+        (name, max(1, min(int(val), clips[name]))
+         if name in clips else val)
+        for name, val in choice.blocks)
+    return replace(choice, blocks=blocks, sharding=sharding)
+
+
+def _apply_mesh(cfg: ModelConfig, lp: LayerPlan, mesh,
+                claims: Dict[str, Sharding], tokens: int) -> LayerPlan:
+    # Clip entries exist ONLY for dims a >1-way axis actually claims — an
+    # unsharded dim keeps the DSE's global tile target untouched.  The
+    # clip never drops below the LANE floor: targets stay lane-aligned
+    # (the module contract) and the wrapper's ``pick_block`` handles
+    # per-shard extents that are genuinely smaller at trace time — this
+    # matters for the serving plan, whose ``tokens`` is the (tiny) slot
+    # count, not the 128-token prefill chunk its dispatches stream.
+    def clips_for(claim: Sharding, dims: Dict[str, Tuple[str, int]]
+                  ) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for block, (dim, extent) in dims.items():
+            n = _axis_size(mesh, claim, dim)
+            if n > 1:
+                out[block] = max(LANE, extent // n)
+        return out
+
+    qkv = _shard_choice(lp.qkv, claims["qkv"], clips_for(claims["qkv"], {
+        "block_t": ("tokens", tokens),
+        # One choice serves wq/wk/wv: the per-shard tile must fit the
+        # narrowest projection's shard.
+        "block_n": ("out", min(cfg.q_dim, cfg.kv_dim)),
+    }))
+    attention = _shard_choice(lp.attention, claims["attention"], {})
+    decode_attn = _shard_choice(lp.decode_attn, claims["decode_attn"], {})
+    ffn_extent = cfg.num_experts if cfg.is_moe else cfg.d_ff
+    ffn_dim = "experts" if cfg.is_moe else "d_ff"
+    ffn = _shard_choice(lp.ffn, claims["ffn"], clips_for(claims["ffn"], {
+        "block_t": ("tokens", tokens),
+        "block_f": (ffn_dim, ffn_extent),
+    }))
+    mixer = _shard_choice(lp.mixer, claims["mixer"], {})
+    return LayerPlan(kind=lp.kind, qkv=qkv, attention=attention,
+                     decode_attn=decode_attn, ffn=ffn, mixer=mixer)
+
+
 def build_stream_plan(cfg: ModelConfig, *, tokens: int,
                       kv_len: Optional[int] = None,
                       platform: Platform = TPU_V5E,
-                      dse_budget: int = 8) -> StreamPlan:
+                      dse_budget: int = 8,
+                      mesh=None) -> StreamPlan:
     """Run the StreamTensor pipeline over every distinct layer kind of
     ``cfg`` and collapse the result into an executable plan.
 
     The DSE explores the tiling space once, on the first layer kind (the
     paper's hyperparameters are global); remaining kinds and the LM head
     are compiled as single trials with the winning parameters.
+
+    With ``mesh``, every stage additionally carries a sharding decision
+    (see ``_mesh_claims``) and feature-dim block targets are clipped to
+    the post-shard extents.
     """
     kinds: Dict[str, int] = {}
     for i in range(cfg.num_layers):
@@ -342,22 +496,35 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
     groups += head_trial.fusion.num_groups
     impls += tuple(lg.implementation for lg in head_lowered)
 
+    mesh_axes: Tuple[Tuple[str, int], ...] = ()
+    if mesh is not None and len(mesh.axis_names) > 0:
+        claims = _mesh_claims(cfg, mesh)
+        layers = [(kind, _apply_mesh(cfg, lp, mesh, claims, tokens))
+                  for kind, lp in layers]
+        d = _axis_size(mesh, claims["lm_head"], "tokens")
+        lm_head = _shard_choice(
+            lm_head, claims["lm_head"],
+            {"block_t": max(LANE, tokens // d)} if d > 1 else {})
+        mesh_axes = tuple((str(a), int(mesh.shape[a]))
+                          for a in mesh.axis_names)
+
     return StreamPlan(
         arch=cfg.name, tokens=tokens, kv_len=kv_len or tokens,
         platform=platform.name,
         default_tile_size=tile or LANE, overall_unroll_size=unroll or 64,
         layers=tuple(layers), lm_head=lm_head,
         modeled_latency_s=latency, fusion_groups=groups,
-        implementations=impls)
+        implementations=impls, mesh_axes=mesh_axes)
 
 
 @functools.lru_cache(maxsize=64)
 def plan_for(cfg: ModelConfig, tokens: int,
-             kv_len: Optional[int] = None) -> StreamPlan:
+             kv_len: Optional[int] = None, mesh=None) -> StreamPlan:
     """Cached plan lookup used by the model entry points.
 
-    Keyed on the (hashable, frozen) config plus the flattened token count
-    and KV length — the jitted callers re-trace per shape anyway, so plan
+    Keyed on the (hashable, frozen) config plus the flattened token count,
+    KV length, and mesh (``jax.sharding.Mesh`` hashes by device grid +
+    axis names) — the jitted callers re-trace per shape anyway, so plan
     granularity matches jit granularity.
     """
-    return build_stream_plan(cfg, tokens=tokens, kv_len=kv_len)
+    return build_stream_plan(cfg, tokens=tokens, kv_len=kv_len, mesh=mesh)

@@ -18,22 +18,9 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-try:                                    # jax >= 0.6 top-level export
-    from jax import shard_map as _shard_map
-except ImportError:                     # older jax: experimental module
-    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-
-def shard_map(body, *, mesh, in_specs, out_specs):
-    """Version-tolerant shard_map: replication checking is named
-    ``check_vma`` on new jax and ``check_rep`` before the rename."""
-    try:
-        return _shard_map(body, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-    except TypeError:
-        return _shard_map(body, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_rep=False)
+from .context import shard_map
 
 Tree = Any
 

@@ -20,6 +20,7 @@ from ..configs.base import ModelConfig, ShapeConfig
 from ..models import (abstract_cache, abstract_params, cache_logical_axes,
                       decode_step, forward_train, logical_axes, padded_vocab,
                       prefill)
+from .context import use_mesh
 from .optimizer import AdamWConfig, OptState, abstract_opt_state, adamw_update
 from .sharding import (activation_spec, batch_spec, optimizer_specs,
                        spec_for, tree_specs)
@@ -101,8 +102,12 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh,
 
     def step_fn(params, opt_state, batch):
         def loss_fn(p):
-            return forward_train(p, cfg, batch, remat=remat,
-                                 act_sharding=act, act_pin_scope=scope)
+            # use_mesh (trace-time): with ``use_fused_kernels`` the plan
+            # resolves mesh-aware and the fused wrappers dispatch their
+            # Pallas kernels under shard_map instead of ignoring the mesh.
+            with use_mesh(mesh):
+                return forward_train(p, cfg, batch, remat=remat,
+                                     act_sharding=act, act_pin_scope=scope)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         # Keep gradients in the parameter layout before the update.
@@ -133,7 +138,11 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
     p_specs = tree_specs(cfg, ax, ab, mesh)
 
     def fn(params, batch):
-        return prefill(params, cfg, batch)
+        # Routed through the fused path: under the mesh context the plan
+        # resolves mesh-aware, so one code path serves 1-device smoke
+        # tests, the forced host-device mesh, and a real cluster.
+        with use_mesh(mesh):
+            return prefill(params, cfg, batch)
 
     def b_specs(batch_abstract):
         return batch_spec(cfg, batch_abstract, mesh)
@@ -153,8 +162,9 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
     len_spec = spec_for(cfg, ("batch",), (shape.global_batch,), mesh)
 
     def fn(params, tokens, cache, cache_pos, lengths):
-        nt, logits, new_cache = decode_step(params, cfg, tokens, cache,
-                                            cache_pos, lengths)
+        with use_mesh(mesh):
+            nt, logits, new_cache = decode_step(params, cfg, tokens, cache,
+                                                cache_pos, lengths)
         return nt, new_cache
 
     jitted = jax.jit(fn, donate_argnums=(2,))

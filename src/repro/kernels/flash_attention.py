@@ -180,15 +180,25 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if q_offset is not None:
         meta = jnp.stack([jnp.asarray(q_offset, jnp.int32).reshape(()),
                           jnp.asarray(kv_len, jnp.int32).reshape(())])
+
+        def kv_block(b, i, j, meta):
+            # Bound KV traffic by the live prefix: a kv block wholly past
+            # the dynamic kv_len (= meta[1]) contributes nothing (its
+            # ``run`` predicate is false), so clamp its index to the LAST
+            # LIVE block — the pipeline re-fetches an already-resident
+            # block instead of DMA'ing dead pages, and ``pl.when``
+            # discards the (never-issued) compute.  Chunked prefill reads
+            # O(prefix) K/V per chunk instead of O(table extent).
+            last_live = jnp.maximum(meta[1] - 1, 0) // bkv
+            return (b // g, jnp.minimum(j, last_live), 0)
+
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,           # [q_offset, kv_len]
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, bq, d), lambda b, i, j, meta: (b, i, 0)),
-                pl.BlockSpec((1, bkv, d),
-                             lambda b, i, j, meta: (b // g, j, 0)),
-                pl.BlockSpec((1, bkv, d),
-                             lambda b, i, j, meta: (b // g, j, 0)),
+                pl.BlockSpec((1, bkv, d), kv_block),
+                pl.BlockSpec((1, bkv, d), kv_block),
             ],
             out_specs=pl.BlockSpec((1, bq, d),
                                    lambda b, i, j, meta: (b, i, 0)),

@@ -28,10 +28,67 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import PartitionSpec as P
 
 Params = Dict[str, Any]
 
 NEG_INF = -1e30
+
+# Trace-time dispatch records (mesh-aware StreamPlan, DESIGN.md §9): each
+# fused wrapper bumps "shard_map" when it dispatched its kernel under
+# shard_map and "single" when it ran single-device — the probe the sharded
+# serving tests use to assert the fused path really went multi-device
+# (counts PROGRAMS TRACED, not calls, like the engine's trace probes).
+DISPATCH_RECORDS: Dict[str, int] = {"shard_map": 0, "single": 0}
+
+
+def reset_dispatch_records() -> None:
+    DISPATCH_RECORDS["shard_map"] = 0
+    DISPATCH_RECORDS["single"] = 0
+
+
+def _shard_mesh(shard):
+    """The active mesh for a plan sharding claim (None = single-device).
+
+    The claim comes from the StreamPlan (``KernelChoice.sharding``); the
+    mesh comes from the ``distributed.context`` the engine / step builder
+    installed around tracing.  Either absent -> plain dispatch.
+    """
+    if not shard:
+        return None
+    from ..distributed.context import current_mesh   # lazy: no core->dist cycle
+    return current_mesh()
+
+
+def _claim_axis(mesh, shard, dim: str, extent: int):
+    """Mesh axis (or axis group, e.g. ('pod', 'data')) the plan claimed
+    for ``dim``, if the RUNTIME extent divides.  Plan-time claims check
+    config-derived extents; batch/token extents are only known here.  A
+    grouped claim degrades like ``spec_for``'s candidate chain — drop
+    leading axes (('pod','data') -> ('data',)) before giving up — and an
+    extent that divides nothing falls back to replication for that dim,
+    never to eager."""
+    ax = dict(shard).get(dim)
+    if mesh is None or ax is None:
+        return None
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    if any(a not in mesh.axis_names for a in axes):
+        return None
+    for start in range(len(axes)):
+        cand = axes[start:]
+        size = 1
+        for a in cand:
+            size *= int(mesh.shape[a])
+        if size > 1 and extent % size == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def _smap(fn, mesh, in_specs, out_specs):
+    """shard_map a kernel dispatch (version-tolerant) and record it."""
+    from ..distributed.context import shard_map
+    DISPATCH_RECORDS["shard_map"] += 1
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 # --------------------------------------------------------------------- #
@@ -505,11 +562,14 @@ def _flat_tokens(x: jax.Array) -> Tuple[jax.Array, Tuple[int, int]]:
 
 def fused_norm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                       eps: float = 1e-6, block_t: int = 256,
-                      block_n: int = 512) -> jax.Array:
+                      block_n: int = 512, shard=()) -> jax.Array:
     """rms_norm(x) @ w via the ``rmsnorm_matmul`` Pallas kernel.
 
     x: [B, S, D]; w: [D, N] -> [B, S, N].  The normalized activation lives
-    only in VMEM (norm stats recomputed per token tile).
+    only in VMEM (norm stats recomputed per token tile).  Under an active
+    mesh the plan's ``shard`` claim runs the kernel column-parallel: batch
+    over 'data', output columns over 'model' (no collective — each shard
+    normalizes the full D row and produces its own columns).
     """
     from ..kernels import rmsnorm_matmul as _kernel
 
@@ -521,12 +581,23 @@ def fused_norm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
     def eager(x, scale, w):
         return rms_norm(x, scale, eps) @ w
 
+    mesh = _shard_mesh(shard)
+    bax = _claim_axis(mesh, shard, "tokens", x.shape[0])
+    nax = _claim_axis(mesh, shard, "out", w.shape[-1])
+    if bax or nax:
+        fused = _smap(fused, mesh,
+                      (P(bax, None, None), P(None), P(None, nax)),
+                      P(bax, None, nax))
+    else:
+        DISPATCH_RECORDS["single"] += 1
     return _pallas_fwd_eager_bwd(fused, eager)(x, scale, w)
 
 
 def fused_matmul(x: jax.Array, w: jax.Array, *, block_t: int = 256,
-                 block_n: int = 256, block_k: int = 512) -> jax.Array:
-    """x @ w via the tiled ``block_matmul`` Pallas kernel ([B,S,D] layout)."""
+                 block_n: int = 256, block_k: int = 512,
+                 shard=()) -> jax.Array:
+    """x @ w via the tiled ``block_matmul`` Pallas kernel ([B,S,D] layout);
+    same column-parallel sharding contract as ``fused_norm_matmul``."""
     from ..kernels import block_matmul as _kernel
 
     def fused(x, w):
@@ -534,15 +605,35 @@ def fused_matmul(x: jax.Array, w: jax.Array, *, block_t: int = 256,
         y = _kernel(xf, w, block_m=block_t, block_n=block_n, block_k=block_k)
         return y.reshape(b, s, w.shape[-1])
 
+    mesh = _shard_mesh(shard)
+    bax = _claim_axis(mesh, shard, "tokens", x.shape[0])
+    nax = _claim_axis(mesh, shard, "out", w.shape[-1])
+    if bax or nax:
+        fused = _smap(fused, mesh, (P(bax, None, None), P(None, nax)),
+                      P(bax, None, nax))
+    else:
+        DISPATCH_RECORDS["single"] += 1
     return _pallas_fwd_eager_bwd(fused, lambda x, w: x @ w)(x, w)
 
 
 def fused_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
               norm_scale: Optional[jax.Array] = None,
-              block_t: int = 256, block_f: int = 512) -> jax.Array:
+              block_t: int = 256, block_f: int = 512,
+              shard=()) -> jax.Array:
     """Stream-fused (GLU) FFN; with ``norm_scale`` the pre-FFN RMSNorm is
-    folded into the kernel so the normalized stream never leaves VMEM."""
+    folded into the kernel so the normalized stream never leaves VMEM.
+
+    Sharded dispatch is Megatron-style row-parallel on ``d_ff``: each
+    shard streams its own F columns of wg/wu and F rows of wd, and the
+    partial [B, S, D] outputs are psum'd over the model axis (the gate
+    activation is elementwise in F, so the split is exact math).
+    """
     from ..kernels import streamed_ffn, streamed_mlp
+
+    mesh = _shard_mesh(shard)
+    bax = _claim_axis(mesh, shard, "tokens", x.shape[0])
+    fax = _claim_axis(mesh, shard, "d_ff",
+                      p["wu"].shape[-1] if "wu" in p else 0)
 
     if gated:
         def fused(x, wg, wu, wd, *norm):
@@ -550,44 +641,65 @@ def fused_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
             y = streamed_ffn(xf, wg, wu, wd, activation=activation,
                              norm_scale=norm[0] if norm else None,
                              block_t=block_t, block_f=block_f)
-            return y.reshape(b, s, -1)
+            y = y.reshape(b, s, -1)
+            return lax.psum(y, fax) if fax else y
 
         def eager(x, wg, wu, wd, *norm):
             h = rms_norm(x, norm[0]) if norm else x
             return (_act(activation, h @ wg) * (h @ wu)) @ wd
 
         args = (x, p["wg"], p["wu"], p["wd"])
+        w_specs = (P(None, fax), P(None, fax), P(fax, None))
     else:
         def fused(x, wu, wd, *norm):
             xf, (b, s) = _flat_tokens(x)
             y = streamed_mlp(xf, wu, wd, activation=activation,
                              norm_scale=norm[0] if norm else None,
                              block_t=block_t, block_f=block_f)
-            return y.reshape(b, s, -1)
+            y = y.reshape(b, s, -1)
+            return lax.psum(y, fax) if fax else y
 
         def eager(x, wu, wd, *norm):
             h = rms_norm(x, norm[0]) if norm else x
             return _act(activation, h @ wu) @ wd
 
         args = (x, p["wu"], p["wd"])
+        w_specs = (P(None, fax), P(fax, None))
     if norm_scale is not None:
         args = args + (norm_scale,)
+        w_specs = w_specs + (P(None),)
+    if bax or fax:
+        fused = _smap(fused, mesh, (P(bax, None, None),) + w_specs,
+                      P(bax, None, None))
+    else:
+        DISPATCH_RECORDS["single"] += 1
     return _pallas_fwd_eager_bwd(fused, eager)(*args)
 
 
 def fused_moe_ffn(x: jax.Array, p: Params, *, activation: str,
-                  top_k: int, block_t: int = 256) -> jax.Array:
-    """Router eager (tiny), experts via the ``moe_experts`` Pallas kernel."""
+                  top_k: int, block_t: int = 256, shard=()) -> jax.Array:
+    """Router eager (tiny), experts via the ``moe_experts`` Pallas kernel.
+
+    Sharded dispatch is expert-parallel: the (globally renormalized)
+    gates and the expert weight stacks split over the model axis, each
+    shard computes its local experts' contributions, and the outputs are
+    psum'd — same math as the dense-gather eager formulation.
+    """
     from ..kernels import moe_experts_pallas
 
     gates = moe_gates(x, p["wr"], top_k)
+
+    mesh = _shard_mesh(shard)
+    bax = _claim_axis(mesh, shard, "tokens", x.shape[0])
+    eax = _claim_axis(mesh, shard, "experts", p["wu"].shape[0])
 
     def fused(x, gates, wg, wu, wd):
         xf, (b, s) = _flat_tokens(x)
         gf = gates.reshape(b * s, -1)
         y = moe_experts_pallas(xf, gf, wg, wu, wd, activation=activation,
                                block_t=block_t)
-        return y.reshape(b, s, -1)
+        y = y.reshape(b, s, -1)
+        return lax.psum(y, eax) if eax else y
 
     def eager(x, gates, wg, wu, wd):
         gate_h = _act(activation, jnp.einsum("...d,edf->...ef", x, wg))
@@ -595,15 +707,30 @@ def fused_moe_ffn(x: jax.Array, p: Params, *, activation: str,
         y = jnp.einsum("...ef,efd->...ed", gate_h * up_h, wd)
         return jnp.einsum("...ed,...e->...d", y, gates)
 
+    if bax or eax:
+        fused = _smap(fused, mesh,
+                      (P(bax, None, None), P(bax, None, eax),
+                       P(eax, None, None), P(eax, None, None),
+                       P(eax, None, None)),
+                      P(bax, None, None))
+    else:
+        DISPATCH_RECORDS["single"] += 1
     return _pallas_fwd_eager_bwd(fused, eager)(
         x, gates, p["wg"], p["wu"], p["wd"])
 
 
 def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
-                    block_q: int = 512, block_kv: int = 512) -> jax.Array:
+                    block_q: int = 512, block_kv: int = 512,
+                    shard=()) -> jax.Array:
     """Flash-attention Pallas kernel with GQA; eager backward recomputes
-    through ``streaming_attention`` / ``local_attention``."""
+    through ``streaming_attention`` / ``local_attention``.
+
+    Sharded dispatch splits the kernel grid's head dimension over the
+    model axis at KV-head granularity (the G query heads sharing a KV
+    head stay together, so GQA reuse survives the split) and batch over
+    'data' — both embarrassingly parallel, no collectives.
+    """
     from ..kernels import flash_attention
 
     def fused(q, k, v):
@@ -615,13 +742,80 @@ def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             return local_attention(q, k, v, window=window)
         return streaming_attention(q, k, v, causal=causal)
 
+    mesh = _shard_mesh(shard)
+    hax = _claim_axis(mesh, shard, "kv_heads", k.shape[2])
+    bax = _claim_axis(mesh, shard, "batch", q.shape[0])
+    if hax or bax:
+        sp = P(bax, None, hax, None)
+        fused = _smap(fused, mesh, (sp, sp, sp), sp)
+    else:
+        DISPATCH_RECORDS["single"] += 1
     return _pallas_fwd_eager_bwd(fused, eager)(q, k, v)
+
+
+def fused_attention_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
+                          q_offset, kv_len, *, causal: bool = True,
+                          window: int = 0, block_q: int = 512,
+                          block_kv: int = 512, shard=()) -> jax.Array:
+    """Chunked-prefill twin of ``fused_attention``: the offset flash
+    kernel with dynamic ``q_offset`` / ``kv_len`` scalar-prefetch
+    operands, dispatched under the plan's sharding (KV heads over the
+    model axis; the scalars replicate).  Serving-only — no VJP pairing
+    (prefill is never differentiated)."""
+    from ..kernels import flash_attention
+
+    def call(q, k, v, off, kl):
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=off, kv_len=kl,
+                               block_q=block_q, block_kv=block_kv)
+
+    mesh = _shard_mesh(shard)
+    hax = _claim_axis(mesh, shard, "kv_heads", k.shape[2])
+    bax = _claim_axis(mesh, shard, "batch", q.shape[0])
+    if hax or bax:
+        sp = P(bax, None, hax, None)
+        call = _smap(call, mesh, (sp, sp, sp, P(), P()), sp)
+    else:
+        DISPATCH_RECORDS["single"] += 1
+    return call(q, k, v, jnp.asarray(q_offset, jnp.int32),
+                jnp.asarray(kv_len, jnp.int32))
+
+
+def fused_paged_attention(q: jax.Array, k_pool: jax.Array,
+                          v_pool: jax.Array, page_table: jax.Array,
+                          lengths: jax.Array, *, window: int = 0,
+                          shard=()) -> jax.Array:
+    """Paged decode attention under the plan's sharding: the KV page
+    pools split over the model axis at the ``kv_heads`` dim (matching the
+    ``PagedKVCache`` pool sharding) and slots over 'data' — with a batch
+    claim the page table and lengths split by slot alongside q, so each
+    data shard prefetches only its own slots' table rows (the pools stay
+    whole on the page dim within a shard, so every row still resolves).
+    Serving-only — no VJP pairing."""
+    from ..kernels import paged_decode_attention
+
+    def call(q, kp, vp, tbl, lens):
+        return paged_decode_attention(q, kp, vp, tbl, lens, window=window)
+
+    mesh = _shard_mesh(shard)
+    hax = _claim_axis(mesh, shard, "kv_heads", k_pool.shape[2])
+    bax = _claim_axis(mesh, shard, "batch", q.shape[0])
+    if hax or bax:
+        call = _smap(call, mesh,
+                     (P(bax, None, hax, None), P(None, None, hax, None),
+                      P(None, None, hax, None), P(bax, None), P(bax)),
+                     P(bax, None, hax, None))
+    else:
+        DISPATCH_RECORDS["single"] += 1
+    return call(q, k_pool, v_pool, page_table, lengths)
 
 
 def fused_mamba2_ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array,
                      b: jax.Array, c: jax.Array, d_skip: jax.Array, *,
-                     chunk: int = 128) -> Tuple[jax.Array, jax.Array]:
-    """Chunked SSD scan via the ``mamba2_scan`` Pallas kernel."""
+                     chunk: int = 128, shard=()) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan via the ``mamba2_scan`` Pallas kernel; sharded
+    dispatch splits the (independent) SSM heads over the model axis and
+    batch over 'data'."""
     from ..kernels import mamba2_ssd_pallas
 
     def fused(x, dt, a_log, b, c, d_skip):
@@ -630,13 +824,25 @@ def fused_mamba2_ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array,
     def eager(x, dt, a_log, b, c, d_skip):
         return mamba2_ssd(x, dt, a_log, b, c, d_skip, chunk=chunk)
 
+    mesh = _shard_mesh(shard)
+    hax = _claim_axis(mesh, shard, "heads", x.shape[2])
+    bax = _claim_axis(mesh, shard, "batch", x.shape[0])
+    if hax or bax:
+        fused = _smap(fused, mesh,
+                      (P(bax, None, hax, None), P(bax, None, hax), P(hax),
+                       P(bax, None, None), P(bax, None, None), P(hax)),
+                      (P(bax, None, hax, None), P(bax, hax, None, None)))
+    else:
+        DISPATCH_RECORDS["single"] += 1
     return _pallas_fwd_eager_bwd(fused, eager)(x, dt, a_log, b, c, d_skip)
 
 
 def fused_wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
-               u: jax.Array, *, chunk: int = 64,
+               u: jax.Array, *, chunk: int = 64, shard=(),
                ) -> Tuple[jax.Array, jax.Array]:
-    """RWKV6 recurrence via the ``rwkv6_wkv`` Pallas kernel."""
+    """RWKV6 recurrence via the ``rwkv6_wkv`` Pallas kernel; sharded
+    dispatch splits the (independent) RWKV heads over the model axis and
+    batch over 'data'."""
     from ..kernels import wkv6_pallas
 
     def fused(r, k, v, w, u):
@@ -645,24 +851,62 @@ def fused_wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     def eager(r, k, v, w, u):
         return wkv6(r, k, v, w, u)
 
+    mesh = _shard_mesh(shard)
+    hax = _claim_axis(mesh, shard, "heads", r.shape[2])
+    bax = _claim_axis(mesh, shard, "batch", r.shape[0])
+    if hax or bax:
+        sp = P(bax, None, hax, None)
+        fused = _smap(fused, mesh, (sp, sp, sp, sp, P(hax, None)),
+                      (sp, P(bax, hax, None, None)))
+    else:
+        DISPATCH_RECORDS["single"] += 1
     return _pallas_fwd_eager_bwd(fused, eager)(r, k, v, w, u)
 
 
 def fused_streamed_xent(hidden: jax.Array, head: jax.Array,
                         labels: jax.Array, vocab_size: int, *,
-                        block_t: int = 256, block_v: int = 2048) -> jax.Array:
+                        block_t: int = 256, block_v: int = 2048,
+                        shard=()) -> jax.Array:
     """Streamed CE loss via the ``streamed_xent`` Pallas kernel: [T, V]
     logits never materialize in the forward; the backward recomputes the
     logits from the (hidden, head) residuals through the eager formulation
     (labels ride along as an integer primal so the VJP structure is right —
-    their cotangent is the symbolic zero)."""
-    from ..kernels import streamed_xent_loss
+    their cotangent is the symbolic zero).
+
+    Sharded dispatch splits the token (batch) dim over 'data': each shard
+    streams its own tokens' vocab tiles, and the (nll sum, valid count)
+    pair is psum'd before the division so the mean weighs every token
+    once regardless of the per-shard valid counts.
+    """
+    from ..kernels import streamed_xent_loss, streamed_xent_parts
+
+    mesh = _shard_mesh(shard)
+    bax = _claim_axis(mesh, shard, "tokens", hidden.shape[0])
 
     def fused(hidden, head, labels):
         hf, (b, s) = _flat_tokens(hidden)
         return streamed_xent_loss(hf, head, labels.reshape(b * s),
                                   vocab_size=vocab_size,
                                   block_t=block_t, block_v=block_v)
+
+    if bax:
+        def fused(hidden, head, labels):            # noqa: F811 — sharded twin
+            hf, (b, s) = _flat_tokens(hidden)
+            lf = labels.reshape(b * s)
+            lse, gold = streamed_xent_parts(
+                hf, head, jnp.maximum(lf, 0), vocab_size=vocab_size,
+                block_t=block_t, block_v=block_v)
+            valid = lf >= 0
+            nll = jnp.where(valid, lse - gold, 0.0)
+            tot = lax.psum(nll.sum(), bax)
+            cnt = lax.psum(valid.sum(), bax)
+            return tot / jnp.maximum(cnt, 1)
+
+        fused = _smap(fused, mesh,
+                      (P(bax, None, None), P(None, None), P(bax, None)),
+                      P())
+    else:
+        DISPATCH_RECORDS["single"] += 1
 
     def eager(hidden, head, labels):
         hf, (b, s) = _flat_tokens(hidden)

@@ -35,19 +35,27 @@ LPlan = Any         # core.stream_plan.LayerPlan
 
 def resolve_plan(cfg: ModelConfig, tokens: int, *,
                  kv_len: Optional[int] = None,
-                 plan: Optional[Plan] = None) -> Optional[Plan]:
+                 plan: Optional[Plan] = None,
+                 mesh=None) -> Optional[Plan]:
     """The StreamPlan driving fused-kernel dispatch, or None for eager.
 
     An explicit ``plan`` wins; otherwise ``cfg.use_fused_kernels`` triggers
     the (cached) compiler pipeline in ``core.stream_plan``.  Resolution
-    happens at trace time — the plan is static under jit.
+    happens at trace time — the plan is static under jit.  ``mesh``
+    defaults to the active ``distributed.context`` mesh, so entry points
+    traced under ``use_mesh(...)`` get mesh-aware plans (per-stage
+    sharding decisions the fused wrappers turn into ``shard_map``)
+    without any caller churn.
     """
     if plan is not None:
         return plan
     if not cfg.use_fused_kernels:
         return None
+    if mesh is None:
+        from ..distributed.context import current_mesh
+        mesh = current_mesh()
     from ..core.stream_plan import plan_for
-    return plan_for(cfg, tokens, kv_len)
+    return plan_for(cfg, tokens, kv_len, mesh)
 
 
 def _lplan(plan: Optional[Plan], kind: str) -> Optional[LPlan]:
@@ -227,7 +235,8 @@ def _mamba_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
     if mixer is not None and mixer.fused:
         chunk = _chunk_of(s, mixer.kw.get("chunk", 128))
         y, state = L.fused_mamba2_ssd(hps, dt, m["a_log"], bmat, cmat,
-                                      m["d_skip"], chunk=chunk)
+                                      m["d_skip"], chunk=chunk,
+                                      shard=mixer.sharding)
     else:
         chunk = _chunk_of(s, 128)
         y, state = L.mamba2_ssd(hps, dt, m["a_log"], bmat, cmat,
@@ -264,7 +273,8 @@ def _rwkv_block_full(cfg: ModelConfig, p: Tree, x: jax.Array, *,
     mixer = lplan.mixer if lplan is not None else None
     if mixer is not None and mixer.fused:
         y, state = L.fused_wkv6(r, k, v, wdec, tm["u"],
-                                chunk=_chunk_of(s, mixer.kw.get("chunk", 64)))
+                                chunk=_chunk_of(s, mixer.kw.get("chunk", 64)),
+                                shard=mixer.sharding)
     elif cfg.rwkv_chunk > 0:
         y, state = L.wkv6_chunked(r, k, v, wdec, tm["u"],
                                   chunk=cfg.rwkv_chunk)
@@ -526,7 +536,8 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
     """
     # Function-local for the same circular-import reason as the decode
     # path: serving imports models at module load.
-    from ..serving.kv_cache import gather_pages, place_chunk_pages
+    from ..serving.kv_cache import (gather_pages, live_page_table,
+                                    place_chunk_pages)
     b, c, d = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
     layout = cfg.kv_cache_layout
@@ -543,8 +554,12 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
     v_new = v.transpose(0, 2, 1, 3) if layout == "bhsd" else v
     kc = place_chunk_pages(cache["k"], k_new, chunk_pages, layout=layout)
     vc = place_chunk_pages(cache["v"], v_new, chunk_pages, layout=layout)
-    kseq = gather_pages(kc, table_row[None], layout=layout)
-    vseq = gather_pages(vc, table_row[None], layout=layout)
+    # Bound KV traffic by the live prefix: the gather touches O(prefix)
+    # distinct pages instead of the slot's full table extent (masking at
+    # kv_len already discards the dead rows' scores).
+    row_live = live_page_table(table_row, kv_len, cache["k"].shape[1])
+    kseq = gather_pages(kc, row_live[None], layout=layout)
+    vseq = gather_pages(vc, row_live[None], layout=layout)
     if layout == "bhsd":
         kseq = kseq.transpose(0, 2, 1, 3)
         vseq = vseq.transpose(0, 2, 1, 3)
@@ -552,11 +567,11 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
     if choice is not None and choice.fused:
         # The plan's flash kernel, offset twin: q_offset/kv_len ride in as
         # scalar-prefetch operands so one compiled program covers every
-        # chunk index over any cache fill.
-        from ..kernels import flash_attention
-        o = flash_attention(q, kseq, vseq, causal=cfg.causal, window=window,
-                            q_offset=offset, kv_len=kv_len,
-                            **choice.kw)
+        # chunk index over any cache fill; the sharded dispatch (and the
+        # shard_map it builds) comes from the plan's sharding claim.
+        o = L.fused_attention_chunk(q, kseq, vseq, offset, kv_len,
+                                    causal=cfg.causal, window=window,
+                                    **choice.kw)
     else:
         o = L.streaming_attention(q, kseq, vseq, causal=cfg.causal,
                                   q_offset=offset, window=window,
@@ -718,7 +733,8 @@ def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
         # function-local (hoisting it is a circular import).  The
         # primitives are pure array ops; they live in serving because
         # that's where the page allocator that owns their layout lives.
-        from ..serving.kv_cache import gather_pages, paged_append
+        from ..serving.kv_cache import (gather_pages, live_page_table,
+                                        paged_append)
         pos_v = pos[:, 0]
         kc = paged_append(cache["k"], page_table, pos_v, k_new,
                           layout=layout)
@@ -726,13 +742,17 @@ def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
                           layout=layout)
         choice = lplan.decode_attn if lplan is not None else None
         if choice is not None and choice.fused:
-            from ..kernels import paged_decode_attention
-            o = paged_decode_attention(q, kc, vc, page_table, lengths + 1,
-                                       window=window)
+            o = L.fused_paged_attention(q, kc, vc, page_table, lengths + 1,
+                                        window=window,
+                                        shard=choice.sharding)
         else:
+            # Bound the gather by each slot's live prefix, mirroring the
+            # chunk path (the length mask already discards dead rows).
+            tbl_live = live_page_table(page_table, lengths + 1,
+                                       cache["k"].shape[1])
             o = L.decode_attention(
-                q, gather_pages(kc, page_table, layout=layout),
-                gather_pages(vc, page_table, layout=layout),
+                q, gather_pages(kc, tbl_live, layout=layout),
+                gather_pages(vc, tbl_live, layout=layout),
                 lengths + 1, window=window, layout=layout)
     else:
         from .params import kv_seq_axis

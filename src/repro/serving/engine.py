@@ -26,6 +26,15 @@ Admission contract: an empty or over-long (``plen > max_len``) prompt is
 FAILED at admission (``Request.failed`` + ``Request.error``) without ever
 taking a slot or a page — it cannot strand the requests already decoding.
 
+Mesh-aware serving (DESIGN.md §9): constructed with ``mesh=``, the engine
+resolves its StreamPlan against the mesh (per-stage sharding decisions),
+creates the paged K/V pools ``kv_heads``-sharded over the model axis with
+a replicated page table, replicates the weights onto the mesh, and traces
+every dispatch under ``use_mesh`` so the plan-selected Pallas kernels run
+inside ``shard_map`` — the same code path serves one device, the forced
+8-virtual-device CPU mesh, and a real cluster, and greedy tokens match
+the single-device engine.
+
 Decode hot loop (§Perf):
 
   * The KV cache is PAGED (``kv_cache.PagedKVCache``): fixed-size pages,
@@ -63,6 +72,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -70,8 +80,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig
+from ..distributed.context import use_mesh
 from ..models import (decode_step, init_cache, prefill, resolve_plan,
                       supports_chunked_prefill)
 from ..models import prefill_chunk as _model_prefill_chunk
@@ -136,8 +148,17 @@ class ServingEngine:
                  decode_block: int = 16, paged: bool = True,
                  page_size: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 chunked: Optional[bool] = None):
+                 chunked: Optional[bool] = None,
+                 mesh=None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # Replicate the weights onto the mesh's device set so every
+            # dispatch (and the shard_maps inside) sees mesh-resident
+            # inputs; the fused wrappers re-slice per the plan's claims.
+            params = jax.device_put(
+                params, jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                     params))
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
@@ -147,11 +168,18 @@ class ServingEngine:
         # so they count PROGRAMS BUILT, not dispatches — the engine's
         # compile-storm signal.
         self._traces: Dict[str, int] = {"prefill": 0, "decode": 0}
+        # EMA of per-dispatch useful-tick fraction — the adaptive prefill
+        # budget's decode-pressure signal (1.0 = every scan tick useful).
+        self.decode_eff = 1.0
 
         # One plan resolution drives both stream granularities: the KV
         # page size (decode) and the prefill chunk size (a multiple of
-        # it).  None when the config runs eager.
-        plan = resolve_plan(cfg, batch_slots, kv_len=max_len)
+        # it) — resolved under the mesh so the plan carries the per-stage
+        # sharding decisions (kept on ``self.plan``: the stage records the
+        # sharded-serving tests assert against).  None when eager.
+        with self._mesh_ctx():
+            plan = resolve_plan(cfg, batch_slots, kv_len=max_len)
+        self.plan = plan
         if page_size is None:
             # Page size = the StreamPlan's KV stream granule (the raw DSE
             # tile its paged-attention choice carries); 16 when eager.
@@ -173,7 +201,7 @@ class ServingEngine:
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
                 cfg, slots=batch_slots, max_len=max_len,
-                page_size=page_size)
+                page_size=page_size, mesh=mesh)
             self._slot_cache = self.kv.init_cache()
 
             def _prefill_into(p, batch, slot_cache, slot, pages):
@@ -236,11 +264,9 @@ class ServingEngine:
                           else 4 * ps))
             want = cdiv(max(1, int(want)), ps) * ps
             self.chunk = max(ps, min(want, self.kv.extent))
-            # Token budget of one scheduler pass: prefill chunks claim it
-            # first, the decode block runs regardless — so decode never
-            # starves, and at most budget/chunk prompts advance per pass.
-            self.sched_tokens = max(self.chunk,
-                                    self.slots * self.decode_block)
+            # The per-pass prefill token budget is adaptive — see
+            # ``_prefill_budget`` (scaled by the decode backlog and the
+            # measured ticks/scan_ticks block-decode efficiency).
 
             def _chunk_fwd(p, toks, slot_cache, row, cpages, off, last):
                 self._traces["prefill"] += 1
@@ -251,7 +277,6 @@ class ServingEngine:
             self._prefill_chunk = jax.jit(_chunk_fwd, donate_argnums=(2,))
         else:
             self.chunk = 0
-            self.sched_tokens = self.slots * self.decode_block
             self._prefill_chunk = None
 
         # Reserved K/V bytes: pool size (paged) / worst-case slot rows
@@ -271,7 +296,17 @@ class ServingEngine:
             "page_size": self.kv.page_size if self.kv else 0,
             "kv_bytes_reserved": self.kv_bytes_reserved,
             "kv_bytes_peak": 0,
+            "sched_budget": 0,
+            "sharded": int(mesh is not None),
+            "kv_shards": self.kv.kv_shards if self.kv else 1,
         }
+
+    def _mesh_ctx(self):
+        """Context installing the engine's mesh for plan resolution and
+        fused-wrapper shard_map dispatch (trace-time; no-op without a
+        mesh).  Every jitted call runs inside it so a first-call retrace
+        always sees the mesh."""
+        return use_mesh(self.mesh) if self.mesh is not None else nullcontext()
 
     # -------------------------------------------------------------- API
     def generate(self, prompts: List[np.ndarray],
@@ -293,7 +328,7 @@ class ServingEngine:
                 break                               # nothing admitted ran
             progressed = False
             if self.chunked:
-                budget = self.sched_tokens
+                budget = self._prefill_budget(active, decoding)
                 for s in range(self.slots):
                     r = active[s]
                     if r is None or decoding[s]:
@@ -319,6 +354,41 @@ class ServingEngine:
         return reqs
 
     # ------------------------------------------------------- scheduling
+    def _prefill_budget(self, active, decoding) -> int:
+        """Adaptive prefill token budget for one scheduler pass.
+
+        The static budget, ``max(chunk, slots * decode_block)``, spends
+        the same share on prefill whether zero or all other slots are
+        mid-decode.  Scale by the actual split instead: each slot waiting
+        on prefill contributes one chunk of budget, and the decode
+        backlog (slots mid-decode) contributes only the fraction the
+        measured block-decode efficiency says decode is NOT using — a
+        saturated decode stream (eff ~ 1) keeps prefill to the waiting
+        slots' share, a draining one (eff -> 0) lends its slack to
+        prompt ingestion.  Efficiency is an EMA over recent dispatches'
+        useful-tick fraction (the cumulative ``ticks``/``scan_ticks``
+        counters stay pure metrics), so the signal tracks the CURRENT
+        split; a cold engine counts as fully efficient so TTFT behavior
+        starts at the conservative split.  At least one chunk always
+        advances (the dispatch loop's ``progressed`` guard), so prefill
+        can't starve either.
+        """
+        waiting = sum(1 for s in range(self.slots)
+                      if active[s] is not None and not decoding[s])
+        if not waiting:
+            self.metrics["sched_budget"] = 0
+            return 0
+        backlog = sum(1 for s in range(self.slots)
+                      if active[s] is not None and decoding[s])
+        # ``decode_eff`` is an EMA of per-dispatch useful-tick fraction
+        # (not the lifetime ticks/scan_ticks ratio, which would stop
+        # responding once enough history accumulated).
+        slack = (1.0 - self.decode_eff) * backlog    # unused decode capacity
+        share = min(float(self.slots), waiting + slack)
+        budget = int(self.chunk * max(1.0, share))
+        self.metrics["sched_budget"] = budget
+        return budget
+
     def _validate(self, r: Request) -> Optional[str]:
         """Admission check: a bad prompt must fail HERE, not mid-dispatch
         where it would strand every active request with its pages held."""
@@ -368,14 +438,15 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {plen} exceeds max_len {self.max_len}")
         batch = {"tokens": jnp.asarray(r.prompt)[None]}
-        if self.kv is not None:
-            pages = jnp.asarray(self.kv.ensure(slot, plen))
-            next_tok, cache = self._prefill(
-                self.params, batch, self._slot_cache, jnp.int32(slot),
-                pages)
-        else:
-            next_tok, cache = self._prefill(
-                self.params, batch, self._slot_cache, jnp.int32(slot))
+        with self._mesh_ctx():
+            if self.kv is not None:
+                pages = jnp.asarray(self.kv.ensure(slot, plen))
+                next_tok, cache = self._prefill(
+                    self.params, batch, self._slot_cache, jnp.int32(slot),
+                    pages)
+            else:
+                next_tok, cache = self._prefill(
+                    self.params, batch, self._slot_cache, jnp.int32(slot))
         # Reassign immediately after every donating dispatch: the donated
         # input buffer is deleted on accelerator backends, and a mid-wave
         # exception must not leave the engine holding a dead reference.
@@ -404,10 +475,11 @@ class ServingEngine:
         row = self.kv.table_row(slot)
         toks, cpages, last = stage_chunk(r.prompt, off, c, row,
                                          self.kv.page_size)
-        next_tok, cache = self._prefill_chunk(
-            self.params, jnp.asarray(toks)[None], self._slot_cache,
-            jnp.asarray(row), jnp.asarray(cpages), jnp.int32(off),
-            jnp.int32(last))
+        with self._mesh_ctx():
+            next_tok, cache = self._prefill_chunk(
+                self.params, jnp.asarray(toks)[None], self._slot_cache,
+                jnp.asarray(row), jnp.asarray(cpages), jnp.int32(off),
+                jnp.int32(last))
         self._slot_cache = cache
         r.prefill_pos = min(off + c, plen)
         self.metrics["prefill_chunks"] += 1
@@ -460,13 +532,16 @@ class ServingEngine:
             for s in runnable:
                 dpos[s] = pos[s]
                 dlen[s] = pos[s]
-            next_tok, cache, toks = self._decode(
-                self.params, jnp.asarray(tok), self._slot_cache,
-                self.kv.page_table, jnp.asarray(dpos), jnp.asarray(dlen))
+            with self._mesh_ctx():
+                next_tok, cache, toks = self._decode(
+                    self.params, jnp.asarray(tok), self._slot_cache,
+                    self.kv.page_table, jnp.asarray(dpos),
+                    jnp.asarray(dlen))
         else:
-            next_tok, cache, toks = self._decode(
-                self.params, jnp.asarray(tok), self._slot_cache,
-                jnp.asarray(pos), jnp.asarray(pos))
+            with self._mesh_ctx():
+                next_tok, cache, toks = self._decode(
+                    self.params, jnp.asarray(tok), self._slot_cache,
+                    jnp.asarray(pos), jnp.asarray(pos))
         self._slot_cache = cache
         toks_np = np.asarray(toks)                   # [N, slots]
         last_np = np.asarray(next_tok)               # [slots, 1]
@@ -487,3 +562,5 @@ class ServingEngine:
         self.metrics["dispatches"] += 1
         self.metrics["ticks"] += useful
         self.metrics["scan_ticks"] += self.decode_block
+        self.decode_eff = (0.5 * self.decode_eff
+                           + 0.5 * useful / self.decode_block)

@@ -30,11 +30,12 @@ run them inside donated jits, and ``models/model.py`` calls
 
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..models.params import (CacheDef, cache_defs, cache_leaf_kind,
@@ -94,6 +95,27 @@ def paged_append(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
                      page_table[jnp.arange(b), posc // page_size],
                      NULL_PAGE)                            # [B]
     return pool.at[phys, posc % page_size].set(tok.astype(pool.dtype))
+
+
+def live_page_table(page_table: jax.Array, lengths, page_size: int
+                    ) -> jax.Array:
+    """Re-route table entries wholly past the live prefix to the NULL page.
+
+    page_table: [max_pages] (one slot) or [B, max_pages]; lengths: the
+    matching scalar or [B] valid-token counts (may be traced).  Bounds KV
+    traffic for the gather paths the same way the offset flash kernel's
+    index-map clamp bounds its DMA: a gather through the clamped table
+    touches O(live prefix) distinct pages — the dead tail all reads the
+    one (cache-resident) NULL page — and correctness is unchanged because
+    every consumer already masks scores at the valid length.
+    """
+    live = (jnp.asarray(lengths) + page_size - 1) // page_size
+    idx = jnp.arange(page_table.shape[-1])
+    if page_table.ndim == 2:
+        mask = idx[None] < jnp.reshape(live, (-1, 1))
+    else:
+        mask = idx < live
+    return jnp.where(mask, page_table, NULL_PAGE)
 
 
 def gather_pages(pool: jax.Array, page_table: jax.Array, *,
@@ -221,7 +243,7 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
-                 page_size: int = 16):
+                 page_size: int = 16, mesh=None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.cfg = cfg
@@ -231,6 +253,39 @@ class PagedKVCache:
         self.pages_per_slot = cdiv(max_len, self.page_size)
         self.num_pages = 1 + slots * self.pages_per_slot
         self._defs = paged_cache_defs(cfg, slots, max_len, self.page_size)
+        # Mesh-aware pool layout (DESIGN.md §9): K/V pools shard over the
+        # model axis at their ``kv_heads`` dim — resolved through the same
+        # logical-axis rules as the parameters, so a head count that does
+        # not divide falls back to replication.  The page table (and the
+        # slot-contiguous state leaves) stay replicated: every shard
+        # resolves the same logical->physical page indirection and only
+        # streams its own heads' slice of each page.
+        self.mesh = mesh
+        self.kv_shards = 1
+        self._shardings: Optional[Tree] = None
+        if mesh is not None:
+            from ..distributed.sharding import spec_for
+
+            def leaf_sharding(path, cd):
+                if cache_leaf_kind(cache_leaf_name(path)) != "kv":
+                    return NamedSharding(mesh, P())
+                return NamedSharding(
+                    mesh, spec_for(cfg, cd.axes, cd.shape, mesh))
+
+            self._shardings = jax.tree_util.tree_map_with_path(
+                leaf_sharding, self._defs,
+                is_leaf=lambda x: isinstance(x, CacheDef))
+            def claims_model(spec) -> bool:
+                return any(e == "model"
+                           or (isinstance(e, tuple) and "model" in e)
+                           for e in spec)
+
+            for s in jax.tree.leaves(
+                    self._shardings,
+                    is_leaf=lambda x: isinstance(x, NamedSharding)):
+                if claims_model(s.spec):
+                    self.kv_shards = int(mesh.shape["model"])
+                    break
         # Bytes of ONE physical page summed over every K/V pool leaf (all
         # layer groups) — the unit of the bytes-in-use accounting.
         self.page_bytes = 0
@@ -248,15 +303,25 @@ class PagedKVCache:
     def init_cache(self) -> Tree:
         """Fresh device cache tree (paged pools + slot-contiguous state).
         The engine owns it from here: it is donated through every dispatch
-        and this object only tracks which pages are whose."""
+        and this object only tracks which pages are whose.  With a mesh,
+        every leaf is placed under its ``NamedSharding`` (K/V pools
+        ``kv_heads``-sharded over 'model', the rest replicated)."""
+        if self._shardings is None:
+            return jax.tree.map(
+                lambda cd: jnp.zeros(cd.shape, cd.dtype), self._defs,
+                is_leaf=lambda x: isinstance(x, CacheDef))
         return jax.tree.map(
-            lambda cd: jnp.zeros(cd.shape, cd.dtype), self._defs,
+            lambda cd, ns: jax.device_put(jnp.zeros(cd.shape, cd.dtype), ns),
+            self._defs, self._shardings,
             is_leaf=lambda x: isinstance(x, CacheDef))
 
     # ------------------------------------------------------------ state
     @property
     def page_table(self) -> jax.Array:
-        return jnp.asarray(self._table)
+        t = jnp.asarray(self._table)
+        if self.mesh is not None:
+            t = jax.device_put(t, NamedSharding(self.mesh, P(None, None)))
+        return t
 
     @property
     def pages_in_use(self) -> int:
@@ -269,6 +334,12 @@ class PagedKVCache:
     @property
     def peak_bytes_in_use(self) -> int:
         return self.peak_pages * self.page_bytes
+
+    @property
+    def peak_bytes_per_shard(self) -> int:
+        """Per-device peak K/V bytes: the pools split over ``kv_shards``
+        (the 'model' factor the kv_heads dim actually claimed)."""
+        return self.peak_bytes_in_use // self.kv_shards
 
     def slot_pages(self, slot: int) -> np.ndarray:
         return np.asarray(self._owned[slot], np.int32)
