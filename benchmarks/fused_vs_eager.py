@@ -16,6 +16,11 @@ Measures the three model entry points under both execution paths:
     aggregate TTFT and the prefill compile count (the engine's
     trace-time probe).  The compile storm is the cost being measured, so
     no warmup run precedes the burst.
+  * shared prefix     — the prefix-cache subsystem (DESIGN.md §10): a
+    second request reusing a long cached prompt prefix vs the cold run
+    on the same (pre-compiled) engine — TTFT, prefill chunk count,
+    prefix hit rate, and the KV bytes NOT recomputed/restored; plus the
+    bootstrap mode's decode-path first token for a fully cached prompt.
   * sharded decode    — the mesh-aware StreamPlan (DESIGN.md §9): the
     fused engine on a (2, 4) ('data', 'model') mesh vs single-device,
     tokens/s plus KV bytes PER SHARD (the pools split over kv_heads) and
@@ -92,7 +97,8 @@ def bench_sharded_decode(base, *, batch: int, max_len: int,
     for name, mesh in (("single", None),
                        ("sharded", make_mesh((2, 4), ("data", "model")))):
         eng = ServingEngine(cfg, params, batch_slots=batch, max_len=max_len,
-                            decode_block=decode_block, mesh=mesh)
+                            decode_block=decode_block, mesh=mesh,
+                            prefix_cache=False)      # measure cold prefill
         eng.generate(prompts, max_new_tokens=2)      # compile
         t0 = time.perf_counter()
         reqs = eng.generate(prompts, max_new_tokens=new_tokens)
@@ -110,6 +116,82 @@ def bench_sharded_decode(base, *, batch: int, max_len: int,
             out[name]["plan_sharding"] = eng.plan.summary()["sharding"]
     out["tokens_equal"] = tokens["single"] == tokens["sharded"]
     out["interpret_mode"] = interpret_default()
+    return out
+
+
+def bench_prefix_serving(base, params, *, max_len: int,
+                         decode_block: int) -> Dict[str, Any]:
+    """Hot-prefix vs cold serving TTFT through the prefix cache.
+
+    One engine serves three waves: a token-distinct warmup (absorbs the
+    chunk/decode compiles and shares nothing), a COLD request, then a HOT
+    request reusing the cold one's long prefix — so the TTFT delta is
+    pure prefill work, not compile noise.  KV bytes saved = pages claimed
+    instead of recomputed-and-restored, times the page byte size.  A
+    second engine measures ``prefix_bootstrap`` on a fully cached prompt
+    (first token through the decode path alone).
+    """
+    if not supports_chunked_prefill(base):
+        return {"skipped": f"{base.name}: no chunked prefill "
+                           "(prefix cache rides on it)"}
+    # Fine stream granules so the shared prefix spans many chunks (the
+    # eager default chunk of 4 pages x 16 would swallow it whole), and a
+    # page-aligned prompt so the bootstrap leg gets a full hit.
+    ps, chunk, pairs = 8, 16, 3
+    nprng = np.random.default_rng(21)
+    plen = (3 * max_len // 4) // ps * ps
+    prefix_len = plen - ps
+
+    def mk(prefix, tail_seed):
+        tail = np.random.default_rng(tail_seed).integers(
+            1, base.vocab_size, ps, dtype=np.int32)
+        return np.concatenate([prefix, tail]).astype(np.int32)
+
+    warmup = nprng.integers(1, base.vocab_size, plen, dtype=np.int32)
+    eng = ServingEngine(base, params, batch_slots=2, max_len=max_len,
+                        decode_block=decode_block, page_size=ps,
+                        prefill_chunk=chunk)
+    eng.generate([warmup], max_new_tokens=2)       # absorb the compiles
+    ttft_cold, ttft_hot, chunks = [], [], []
+    for i in range(pairs):                         # fresh prefix per pair
+        prefix = nprng.integers(1, base.vocab_size, prefix_len,
+                                dtype=np.int32)
+        c0 = eng.metrics["prefill_chunks"]
+        cold = eng.generate([mk(prefix, 2 * i)], max_new_tokens=4)[0]
+        c1 = eng.metrics["prefill_chunks"]
+        hot = eng.generate([mk(prefix, 2 * i + 1)], max_new_tokens=4)[0]
+        c2 = eng.metrics["prefill_chunks"]
+        ttft_cold.append(cold.ttft_s)
+        ttft_hot.append(hot.ttft_s)
+        chunks.append((c1 - c0, c2 - c1))
+    tc, th = float(np.median(ttft_cold)), float(np.median(ttft_hot))
+    out: Dict[str, Any] = {
+        "prompt_len": plen,
+        "shared_prefix_len": prefix_len,
+        "ttft_cold_s": tc,
+        "ttft_hot_s": th,
+        "hot_over_cold_ttft": th / max(tc, 1e-9),
+        "prefill_chunks_cold": chunks[-1][0],
+        "prefill_chunks_hot": chunks[-1][1],
+        "prefix_hit_rate": eng.metrics["prefix_hit_rate"],
+        "prefix_hit_pages": int(eng.metrics["prefix_hit_pages"]),
+        "kv_bytes_saved": int(eng.metrics["prefix_hit_pages"]
+                              * eng.kv.page_bytes),
+        "kv_bytes_cached": int(eng.metrics["kv_bytes_cached"]),
+    }
+    boot = ServingEngine(base, params, batch_slots=2, max_len=max_len,
+                         decode_block=decode_block, page_size=ps,
+                         prefill_chunk=chunk, prefix_bootstrap=True)
+    boot.generate([warmup], max_new_tokens=2)        # compile
+    cached_p = mk(warmup[:prefix_len], 99)
+    boot.generate([cached_p], max_new_tokens=4)      # cache the prompt
+    tts = []
+    for _ in range(pairs):                           # fully cached replays
+        tts.append(boot.generate([cached_p],
+                                 max_new_tokens=4)[0].ttft_s)
+    out["ttft_bootstrap_s"] = float(np.median(tts))
+    out["bootstraps"] = int(boot.metrics["prefix_bootstraps"])
+    out["cow_copies"] = int(boot.metrics["cow_copies"])
     return out
 
 
@@ -152,9 +234,13 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
 
         decode: Dict[str, Any] = {}
         for paged in (False, True):
+            # prefix_cache off: the warmup generate would otherwise cache
+            # these prompts and make the measured run prefill-hot — the
+            # prefix win is measured in its own section below.
             engine = ServingEngine(cfg, params, batch_slots=batch,
                                    max_len=max_len,
-                                   decode_block=decode_block, paged=paged)
+                                   decode_block=decode_block, paged=paged,
+                                   prefix_cache=False)
             engine.generate(prompts, max_new_tokens=2)  # compile
             d0 = engine.metrics["dispatches"]
             g0 = engine.metrics["generated"]
@@ -235,6 +321,8 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     result["loss_abs_diff"] = abs(losses["eager"] - losses["fused"])
     result["fused_over_eager_train"] = (result["fused"]["train_s"]
                                         / result["eager"]["train_s"])
+    result["prefix_serving"] = bench_prefix_serving(
+        base, params, max_len=max_len, decode_block=decode_block)
     result["sharded_decode"] = bench_sharded_decode(
         base, batch=batch, max_len=max_len, decode_block=decode_block,
         new_tokens=new_tokens)
@@ -274,6 +362,16 @@ def main(argv=None) -> int:
                 f"burst ttft {pb['per_length']['ttft_mean_s']*1e3:.0f}ms "
                 f"({pb['per_length']['prefill_compiles']} compiles, "
                 "no chunked support)")
+        px = r["prefix_serving"]
+        if "skipped" in px:
+            prefix_note = "prefix serving skipped"
+        else:
+            prefix_note = (
+                f"prefix ttft {px['ttft_hot_s']*1e3:.0f}ms hot / "
+                f"{px['ttft_cold_s']*1e3:.0f}ms cold "
+                f"(hit rate {px['prefix_hit_rate']:.2f}, "
+                f"{px['kv_bytes_saved']} B saved, "
+                f"bootstrap {px['ttft_bootstrap_s']*1e3:.0f}ms)")
         sd = r["sharded_decode"]
         if "skipped" in sd:
             shard_note = "sharded decode skipped (<8 devices)"
@@ -289,7 +387,7 @@ def main(argv=None) -> int:
               f"{f['decode_tokens_per_s']:.1f} tok/s | "
               f"kv peak {dc['paged']['kv_bytes_peak']} paged / "
               f"{dc['contiguous']['kv_bytes_peak']} contiguous bytes | "
-              f"{burst_note} | {shard_note} | "
+              f"{burst_note} | {prefix_note} | {shard_note} | "
               f"loss diff {r['loss_abs_diff']:.2e}", flush=True)
 
     with open(args.out, "w") as fh:

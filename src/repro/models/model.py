@@ -518,7 +518,10 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
                       table_row: jax.Array, chunk_pages: jax.Array,
                       offset: jax.Array, kv_len: jax.Array, *,
                       window: int = 0,
-                      lplan: Optional[LPlan] = None) -> Tuple[jax.Array, Tree]:
+                      lplan: Optional[LPlan] = None,
+                      cow_src: Optional[jax.Array] = None,
+                      cow_dst: Optional[jax.Array] = None,
+                      ) -> Tuple[jax.Array, Tree]:
     """One attention block over a prompt CHUNK, against the paged cache.
 
     x: [1, C, D]; cache: {"k","v"} pools [P, page_size, Hkv, hd];
@@ -533,6 +536,13 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
     through the same pools the decode step will keep appending to.  Pad
     tokens of a final partial chunk sit at positions past every real
     query, so causal masking excludes them for free.
+
+    ``cow_src``/``cow_dst`` (traced int32 scalars, ``NULL_PAGE`` when
+    idle) drive the copy-on-write path: when this chunk's span includes
+    a page the slot shares through the prefix cache, the shared page is
+    copied onto the private ``cow_dst`` inside both pools before the
+    scatter — a shared page is never a write target (DESIGN.md §10).
+    ``table_row`` / ``chunk_pages`` already carry ``cow_dst``.
     """
     # Function-local for the same circular-import reason as the decode
     # path: serving imports models at module load.
@@ -552,8 +562,10 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
     k = L.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
     k_new = k.transpose(0, 2, 1, 3) if layout == "bhsd" else k
     v_new = v.transpose(0, 2, 1, 3) if layout == "bhsd" else v
-    kc = place_chunk_pages(cache["k"], k_new, chunk_pages, layout=layout)
-    vc = place_chunk_pages(cache["v"], v_new, chunk_pages, layout=layout)
+    kc = place_chunk_pages(cache["k"], k_new, chunk_pages, layout=layout,
+                           cow_src=cow_src, cow_dst=cow_dst)
+    vc = place_chunk_pages(cache["v"], v_new, chunk_pages, layout=layout,
+                           cow_src=cow_src, cow_dst=cow_dst)
     # Bound KV traffic by the live prefix: the gather touches O(prefix)
     # distinct pages instead of the slot's full table extent (masking at
     # kv_len already discards the dead rows' scores).
@@ -585,19 +597,25 @@ def _apply_block_chunk(cfg: ModelConfig, kind: str, p: Tree, x: jax.Array,
                        cache: Tree, table_row: jax.Array,
                        chunk_pages: jax.Array, offset: jax.Array,
                        kv_len: jax.Array,
-                       lplan: Optional[LPlan] = None) -> Tuple[jax.Array, Tree]:
+                       lplan: Optional[LPlan] = None,
+                       cow_src: Optional[jax.Array] = None,
+                       cow_dst: Optional[jax.Array] = None,
+                       ) -> Tuple[jax.Array, Tree]:
     if kind not in ("attn", "local_attn", "global_attn"):
         raise NotImplementedError(
             f"chunked prefill does not support layer kind {kind!r} "
             "(gate on supports_chunked_prefill)")
     window = cfg.sliding_window if kind == "local_attn" else 0
     return _attn_block_chunk(cfg, p, x, cache, table_row, chunk_pages,
-                             offset, kv_len, window=window, lplan=lplan)
+                             offset, kv_len, window=window, lplan=lplan,
+                             cow_src=cow_src, cow_dst=cow_dst)
 
 
 def prefill_chunk(params: Tree, cfg: ModelConfig, tokens: jax.Array,
                   cache: Tree, table_row: jax.Array, chunk_pages: jax.Array,
-                  offset: jax.Array, last_idx: jax.Array, *,
+                  offset: jax.Array, last_idx: jax.Array,
+                  cow_src: Optional[jax.Array] = None,
+                  cow_dst: Optional[jax.Array] = None, *,
                   plan: Optional[Plan] = None,
                   ) -> Tuple[jax.Array, jax.Array, Tree]:
     """Process ONE fixed-size prompt chunk against the paged decode cache.
@@ -610,10 +628,20 @@ def prefill_chunk(params: Tree, cfg: ModelConfig, tokens: jax.Array,
     last_idx: within-chunk index of the prompt's last real token (only
     meaningful on the final chunk — earlier dispatches discard the token).
 
-    Every dynamic quantity (offset, last_idx, page ids) is a traced
-    operand, so ONE compiled program serves every chunk of every prompt —
-    the compile count is independent of the prompt-length mix.  Returns
-    (next_token [1, 1], logits [1, 1, Vp] at ``last_idx``, new_cache).
+    ``offset`` may be any page-aligned position, including a NONZERO
+    first-dispatch offset against table rows the prefix cache
+    pre-populated with shared pages (DESIGN.md §10): the gather walks the
+    whole live row, so queries attend to the claimed prefix exactly as
+    they would to self-computed chunks.  ``cow_src``/``cow_dst`` (traced
+    int32 scalars, ``NULL_PAGE`` when idle) copy one shared page onto a
+    private one in every layer's K and V pool before the chunk scatter —
+    the copy-on-write step for a chunk whose span overlaps a shared page.
+
+    Every dynamic quantity (offset, last_idx, page ids, the COW pair) is
+    a traced operand, so ONE compiled program serves every chunk of every
+    prompt — the compile count is independent of the prompt-length mix.
+    Returns (next_token [1, 1], logits [1, 1, Vp] at ``last_idx``,
+    new_cache).
     """
     if not supports_chunked_prefill(cfg):
         raise NotImplementedError(
@@ -642,7 +670,8 @@ def prefill_chunk(params: Tree, cfg: ModelConfig, tokens: jax.Array,
             x, nc = _apply_block_chunk(cfg, kind, block_params[pidx], x,
                                        cache_g[pidx], table_row,
                                        chunk_pages, offset, kv_len,
-                                       lplan=_lplan(plan, kind))
+                                       lplan=_lplan(plan, kind),
+                                       cow_src=cow_src, cow_dst=cow_dst)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -657,7 +686,8 @@ def prefill_chunk(params: Tree, cfg: ModelConfig, tokens: jax.Array,
         c_i = jax.tree.map(lambda a: a[0], cache["rest"][i])
         x, nc = _apply_block_chunk(cfg, kind, bp, x, c_i, table_row,
                                    chunk_pages, offset, kv_len,
-                                   lplan=_lplan(plan, kind))
+                                   lplan=_lplan(plan, kind),
+                                   cow_src=cow_src, cow_dst=cow_dst)
         new_rest.append(jax.tree.map(lambda a: a[None], nc))
     x = L.apply_norm(cfg.norm, x, params["final_norm"])
     h_last = lax.dynamic_slice_in_dim(x, jnp.asarray(last_idx, jnp.int32),

@@ -1,6 +1,9 @@
-"""Serving runtime: continuous-batching engine over a paged KV cache."""
+"""Serving runtime: continuous-batching engine over a paged KV cache
+with radix-tree prefix sharing."""
 from .engine import Request, ServingEngine
-from .kv_cache import (PagedKVCache, gather_pages, paged_append,
-                       place_chunk_pages, place_prefill)
-__all__ = ["Request", "ServingEngine", "PagedKVCache", "gather_pages",
-           "paged_append", "place_chunk_pages", "place_prefill"]
+from .kv_cache import (PagedKVCache, cow_copy_pool, gather_pages,
+                       paged_append, place_chunk_pages, place_prefill)
+from .prefix_cache import PrefixCache, PrefixHit
+__all__ = ["Request", "ServingEngine", "PagedKVCache", "PrefixCache",
+           "PrefixHit", "cow_copy_pool", "gather_pages", "paged_append",
+           "place_chunk_pages", "place_prefill"]

@@ -25,6 +25,28 @@ fall back to whole-prompt prefill automatically.
 Admission contract: an empty or over-long (``plen > max_len``) prompt is
 FAILED at admission (``Request.failed`` + ``Request.error``) without ever
 taking a slot or a page — it cannot strand the requests already decoding.
+A slot abandoned MID-prefill (allocator failure between chunks) fails the
+same way: its already-placed pages return to the allocator exactly once
+(refcounted release — see ``kv_cache.assert_page_accounting``).
+
+Prefix cache (DESIGN.md §10): in chunked mode the engine threads
+admission through a radix-tree prefix walk (``serving/prefix_cache.py``)
+— a request whose prompt shares page-aligned chunks with earlier traffic
+claims the cached physical pages into its table row and prefills only
+the divergent tail; on slot exit the pages stay cached in the tree until
+memory pressure evicts them.  ``prefix_bootstrap=True`` additionally
+claims partial tail pages and serves a fully-cached prompt through the
+decode path alone (one dispatch to first token), copy-on-writing the
+shared last page before the first append.  ``admission=`` picks the
+queue order: FIFO (default), shortest-job-first, or
+longest-cached-prefix-first.
+
+Scheduler knobs: the chunked-prefill token budget is backlog-adaptive
+(``_prefill_budget``), and ``adaptive_decode_block=True`` additionally
+scales the decode scan length with the active-slot count — floored at
+the static ``decode_block``, stepped in power-of-two multiples (bounded
+compile count), pulled back by the ``decode_eff`` EMA when scan ticks
+are being wasted.
 
 Mesh-aware serving (DESIGN.md §9): constructed with ``mesh=``, the engine
 resolves its StreamPlan against the mesh (per-stage sharding decisions),
@@ -88,7 +110,9 @@ from ..models import (decode_step, init_cache, prefill, resolve_plan,
                       supports_chunked_prefill)
 from ..models import prefill_chunk as _model_prefill_chunk
 from ..models.params import cache_leaf_kind, cache_leaf_name
-from .kv_cache import PagedKVCache, cdiv, place_prefill, stage_chunk
+from .kv_cache import (NULL_PAGE, PagedKVCache, cdiv, place_prefill,
+                       stage_chunk)
+from .prefix_cache import PrefixCache
 
 Tree = Any
 
@@ -149,9 +173,18 @@ class ServingEngine:
                  page_size: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  chunked: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None,
+                 prefix_bootstrap: bool = False,
+                 admission: str = "fifo",
+                 adaptive_decode_block: bool = False,
                  mesh=None):
         self.cfg = cfg
         self.mesh = mesh
+        if admission not in ("fifo", "sjf", "prefix"):
+            raise ValueError(f"unknown admission policy {admission!r} "
+                             "(fifo | sjf | prefix)")
+        self.admission = admission
+        self.adaptive_decode_block = adaptive_decode_block
         if mesh is not None:
             # Replicate the weights onto the mesh's device set so every
             # dispatch (and the shard_maps inside) sees mesh-resident
@@ -212,8 +245,26 @@ class ServingEngine:
                 return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
                         placed)
 
-            def _decode_n(p, tok, cache, table, pos, lengths):
+            def _decode_n(p, tok, cache, table, pos, lengths, cow_src,
+                          cow_dst, block):
                 self._traces["decode"] += 1
+                # Copy-on-write step (prefix bootstrap): slots whose next
+                # append lands inside a shared page carry a (src, dst)
+                # page pair; the shared page is duplicated onto the
+                # private dst in every K/V pool BEFORE the scan — inside
+                # the donated dispatch, so no extra host round trip.
+                # Idle slots carry NULL pairs (the NULL page copied onto
+                # itself).  ``table`` already points at dst.  Traced in
+                # only when bootstrap can actually produce a COW — a
+                # non-bootstrap engine must not pay the no-op page
+                # gather/scatter on every decode dispatch.
+                if prefix_bootstrap:
+                    def cow(path, leaf):
+                        if cache_leaf_kind(cache_leaf_name(path)) != "kv":
+                            return leaf
+                        return leaf.at[:, cow_dst].set(leaf[:, cow_src])
+
+                    cache = jax.tree_util.tree_map_with_path(cow, cache)
 
                 def tick(carry, _):
                     tok, cache, pos, lengths = carry
@@ -222,7 +273,7 @@ class ServingEngine:
                     return (nt, cache, pos + 1, lengths + 1), nt[:, 0]
 
                 carry, toks = lax.scan(tick, (tok, cache, pos, lengths),
-                                       None, length=self.decode_block)
+                                       None, length=block)
                 return carry[0], carry[1], toks          # toks: [N, B]
         else:
             self.kv = None
@@ -235,7 +286,7 @@ class ServingEngine:
                 return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
                         placed)
 
-            def _decode_n(p, tok, cache, pos, lengths):
+            def _decode_n(p, tok, cache, pos, lengths, block):
                 self._traces["decode"] += 1
 
                 def tick(carry, _):
@@ -245,13 +296,17 @@ class ServingEngine:
                     return (nt, cache, pos + 1, lengths + 1), nt[:, 0]
 
                 carry, toks = lax.scan(tick, (tok, cache, pos, lengths),
-                                       None, length=self.decode_block)
+                                       None, length=block)
                 return carry[0], carry[1], toks
 
         # Donate the slot cache through both dispatches: K/V page scatters
         # and state-row updates happen in place, not as full-pool copies.
+        # The scan length is a STATIC arg so the adaptive decode block can
+        # step it (each distinct value is one compiled program; the
+        # power-of-two ladder bounds the count at three).
         self._prefill = jax.jit(_prefill_into, donate_argnums=(2,))
-        self._decode = jax.jit(_decode_n, donate_argnums=(2,))
+        self._decode = jax.jit(_decode_n, donate_argnums=(2,),
+                               static_argnums=(8,) if paged else (5,))
 
         if self.chunked:
             assert self.kv is not None
@@ -268,16 +323,43 @@ class ServingEngine:
             # ``_prefill_budget`` (scaled by the decode backlog and the
             # measured ticks/scan_ticks block-decode efficiency).
 
-            def _chunk_fwd(p, toks, slot_cache, row, cpages, off, last):
+            def _chunk_fwd(p, toks, slot_cache, row, cpages, off, last,
+                           cow_src, cow_dst):
                 self._traces["prefill"] += 1
                 nt, _lg, placed = _model_prefill_chunk(
-                    p, cfg, toks, slot_cache, row, cpages, off, last)
+                    p, cfg, toks, slot_cache, row, cpages, off, last,
+                    cow_src, cow_dst)
                 return nt, placed
 
             self._prefill_chunk = jax.jit(_chunk_fwd, donate_argnums=(2,))
         else:
             self.chunk = 0
             self._prefill_chunk = None
+
+        # Prefix cache: radix-tree page sharing over the paged pools
+        # (DESIGN.md §10).  Defaults ON whenever chunked prefill runs —
+        # the default chunk-aligned matching keeps greedy tokens
+        # bit-identical to a cold engine, so sharing is a pure traffic
+        # win.  ``prefix_bootstrap`` switches to page-granular matching
+        # with the decode-path fast admission for fully-cached prompts.
+        if prefix_cache is None:
+            prefix_cache = self.chunked
+        if prefix_cache and not self.chunked:
+            raise ValueError("prefix_cache requires chunked prefill "
+                             "(pages are shared at chunk granularity)")
+        if prefix_bootstrap and not prefix_cache:
+            raise ValueError("prefix_bootstrap requires prefix_cache")
+        if admission == "prefix" and not prefix_cache:
+            raise ValueError('admission="prefix" requires prefix_cache')
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            self.prefix = PrefixCache(self.kv, chunk=self.chunk,
+                                      bootstrap=prefix_bootstrap)
+        # Pending copy-on-write per slot: the LOGICAL page whose next
+        # write must swap in a private copy (the physical src is read
+        # from the table row at swap time — never cached here).
+        self._cow: List[Optional[int]] = [None] * batch_slots
+        self._prompt_pages = 0
 
         # Reserved K/V bytes: pool size (paged) / worst-case slot rows
         # (contiguous) — the paged win is measured against bytes-IN-USE.
@@ -296,9 +378,19 @@ class ServingEngine:
             "page_size": self.kv.page_size if self.kv else 0,
             "kv_bytes_reserved": self.kv_bytes_reserved,
             "kv_bytes_peak": 0,
+            "kv_bytes_cached": 0,
             "sched_budget": 0,
             "sharded": int(mesh is not None),
             "kv_shards": self.kv.kv_shards if self.kv else 1,
+            "prefix_enabled": int(self.prefix is not None),
+            "prefix_hit_pages": 0,
+            "prefix_hit_rate": 0.0,
+            "prompt_pages": 0,
+            "cow_copies": 0,
+            "prefix_bootstraps": 0,
+            "prefix_evictions": 0,
+            "prefix_cached_pages": 0,
+            "decode_block_last": self.decode_block,
         }
 
     def _mesh_ctx(self):
@@ -349,6 +441,14 @@ class ServingEngine:
                 self.metrics["kv_bytes_peak"], self.kv.peak_bytes_in_use)
         else:
             self.metrics["kv_bytes_peak"] = self.kv_bytes_reserved
+        if self.prefix is not None:
+            self.metrics["prompt_pages"] = self._prompt_pages
+            self.metrics["prefix_hit_rate"] = (
+                self.metrics["prefix_hit_pages"]
+                / max(self._prompt_pages, 1))
+            self.metrics["prefix_evictions"] = self.prefix.evictions
+            self.metrics["prefix_cached_pages"] = self.kv.pages_cached
+            self.metrics["kv_bytes_cached"] = self.kv.bytes_cached
         self.metrics["prefill_traces"] = self._traces["prefill"]
         self.metrics["decode_traces"] = self._traces["decode"]
         return reqs
@@ -389,6 +489,33 @@ class ServingEngine:
         self.metrics["sched_budget"] = budget
         return budget
 
+    def _next_request(self, pending, scores=None) -> Request:
+        """Pop the next request per the admission policy.  ``fifo`` is
+        arrival order; ``sjf`` picks the shortest prompt (classic
+        shortest-job-first: small jobs stop queueing behind big ones);
+        ``prefix`` picks the longest-cached-prefix prompt (its prefill is
+        mostly free NOW, and serving it while its prefix is hot avoids
+        re-computing it after eviction).  Ties fall back to arrival
+        order.  ``scores`` is the per-admission-pass radix-walk memo —
+        the tree only changes between scheduler passes, so one walk per
+        request per pass suffices (not one per slot fill)."""
+        if self.admission == "fifo" or len(pending) <= 1:
+            return pending.popleft()
+        if self.admission == "sjf":
+            idx = min(range(len(pending)),
+                      key=lambda i: (int(pending[i].prompt.shape[0]), i))
+        else:                                       # "prefix"
+            def score(i):
+                r = pending[i]
+                if r.rid not in scores:
+                    scores[r.rid] = self.prefix.lookup_pages(r.prompt)
+                return scores[r.rid]
+
+            idx = max(range(len(pending)), key=lambda i: (score(i), -i))
+        r = pending[idx]
+        del pending[idx]
+        return r
+
     def _validate(self, r: Request) -> Optional[str]:
         """Admission check: a bad prompt must fail HERE, not mid-dispatch
         where it would strand every active request with its pages held."""
@@ -405,9 +532,10 @@ class ServingEngine:
         skipped; the engine keeps serving.  Chunked mode only ASSIGNS the
         slot (prefill work is scheduled chunk-by-chunk); the fallback path
         prefills the whole prompt at its own length, as before."""
+        scores: Dict[int, int] = {}
         for s in range(self.slots):
             while active[s] is None and pending:
-                r = pending.popleft()
+                r = self._next_request(pending, scores)
                 err = self._validate(r)
                 if err is not None:
                     r.failed = True
@@ -418,6 +546,11 @@ class ServingEngine:
                     continue
                 if self.chunked:
                     r.prefill_pos = 0
+                    self._cow[s] = None
+                    if self.prefix is not None:
+                        self._admit_prefix(s, r, active, decoding, pos,
+                                           tok)
+                        continue
                     active[s] = r
                     decoding[s] = False
                     continue
@@ -428,6 +561,36 @@ class ServingEngine:
                 else:
                     active[s] = r
                     decoding[s] = True
+
+    def _admit_prefix(self, slot: int, r: Request, active, decoding, pos,
+                      tok) -> None:
+        """Chunked admission through the prefix walk: claim every cached
+        prefix page into the slot's table row and resume prefill at the
+        first non-cached chunk.  Under ``prefix_bootstrap`` a fully
+        cached prompt (coverage >= plen - 1) skips prefill entirely — the
+        final prompt token is fed through the decode path, whose first
+        append copy-on-writes the shared tail page."""
+        hit = self.prefix.claim(slot, r.prompt)
+        r.prefill_pos = hit.prefill_start
+        self._cow[slot] = hit.cow
+        self.metrics["prefix_hit_pages"] += hit.hit_pages
+        self._prompt_pages += hit.prompt_pages
+        active[slot] = r
+        if not hit.full:
+            decoding[slot] = False
+            return
+        # Bootstrap fast path: TTFT = one decode dispatch.  The claimed
+        # pages hold KV for tokens 0..plen-2; the decode step computes
+        # (and appends, post-COW) the final prompt token's KV and emits
+        # the first output token.
+        plen = int(r.prompt.shape[0])
+        self.prefix.insert(slot, r.prompt)      # re-stamp; nothing new
+        r.prefill_pos = plen
+        decoding[slot] = True
+        pos[slot] = plen - 1
+        tok[slot, 0] = int(r.prompt[-1])
+        self.metrics["prefix_bootstraps"] += 1
+        self.metrics["prefills"] += 1
 
     def _admit(self, slot: int, r: Request, pos, tok) -> None:
         """Whole-prompt prefill at the request's own length (fallback path:
@@ -464,27 +627,58 @@ class ServingEngine:
                         pos, tok) -> None:
         """One fixed-size prefill chunk through the single compiled
         ``prefill_chunk`` program; the final chunk emits the first token
-        and flips the slot to decoding."""
+        and flips the slot to decoding.  The first dispatch of a
+        prefix-hit request starts at a NONZERO page-aligned offset
+        against the pre-claimed table row."""
         assert self.kv is not None and self._prefill_chunk is not None
         c = self.chunk
         plen = int(r.prompt.shape[0])
         off = r.prefill_pos
+        if self.prefix is not None and self._cow[slot] is None:
+            # Catch-up walk: pages for our NEXT chunks may have appeared
+            # since admission (a same-wave request computing the shared
+            # prefix inserts as it completes) — claim them and skip ahead.
+            off, caught = self.prefix.extend_claim(slot, r.prompt, off)
+            if caught:
+                r.prefill_pos = off
+                self.metrics["prefix_hit_pages"] += caught
         # Pages for the chunk's span (page-aligned by construction); the
         # portion of a final chunk past max_len maps to the NULL page.
-        self.kv.ensure(slot, min(off + c, self.max_len))
+        # An allocator failure here (pool pressure with every cached page
+        # still referenced) fails THIS request without stranding the
+        # stream — its already-placed pages return exactly once.
+        try:
+            self.kv.ensure(slot, min(off + c, self.max_len))
+        except RuntimeError as e:
+            r.failed = True
+            r.error = str(e)
+            self.metrics["rejected"] += 1
+            self._retire(slot, r, active, decoding, pos, tok)
+            return
         row = self.kv.table_row(slot)
         toks, cpages, last = stage_chunk(r.prompt, off, c, row,
                                          self.kv.page_size)
         with self._mesh_ctx():
+            # The COW operands ride as NULL here: the engine's matching
+            # policies never hand a chunk a shared write target (default
+            # mode restarts on fresh pages; bootstrap full hits COW on
+            # the decode path).  The operands stay in the program for
+            # API-level sub-chunk sharing (tests drive them; ROADMAP
+            # names the bit-exact sub-chunk follow-on).
             next_tok, cache = self._prefill_chunk(
                 self.params, jnp.asarray(toks)[None], self._slot_cache,
                 jnp.asarray(row), jnp.asarray(cpages), jnp.int32(off),
-                jnp.int32(last))
+                jnp.int32(last), jnp.int32(NULL_PAGE),
+                jnp.int32(NULL_PAGE))
         self._slot_cache = cache
         r.prefill_pos = min(off + c, plen)
         self.metrics["prefill_chunks"] += 1
         if r.prefill_pos < plen:
             return                                  # more chunks to go
+        if self.prefix is not None:
+            # Prefill done: the full prompt pages are final — index them
+            # so concurrent and future requests share them.
+            self.prefix.insert(slot, r.prompt)
         t = int(np.asarray(next_tok)[0, 0])
         r.out_tokens.append(t)
         r.first_token_at = time.perf_counter()
@@ -505,24 +699,81 @@ class ServingEngine:
         decoding[slot] = False
         pos[slot] = 0
         tok[slot, 0] = 0
+        self._cow[slot] = None
+        if self.prefix is not None:
+            # Slot exit: drop the tree references first (re-stamps the
+            # prefix as most-recently-used), then release — exclusive
+            # pages free, tree pages stay CACHED until eviction.
+            self.prefix.release_slot(slot)
         if self.kv is not None:
             self.kv.release(slot)
 
+    def _decode_block_size(self, n_active: int) -> int:
+        """Scan ticks for the next decode dispatch.  Static by default;
+        with ``adaptive_decode_block`` the block scales with the active-
+        slot count — more slots decoding efficiently means each dispatch
+        retires more real tokens, so a longer scan amortizes the fixed
+        host round-trip further — floored at the static ``decode_block``
+        and pulled back by the ``decode_eff`` EMA when ticks are being
+        wasted (slots retiring mid-block).  Power-of-two steps capped at
+        4x bound the compiled-program count at three."""
+        if not self.adaptive_decode_block:
+            return self.decode_block
+        scale = n_active * max(self.decode_eff, 0.0)
+        k = 0
+        while k < 2 and (2 << k) <= scale:
+            k += 1
+        return self.decode_block << k
+
     def _decode_block(self, active, decoding, pos, tok) -> None:
-        """One jitted dispatch: ``decode_block`` scan ticks across all
-        slots, each at its own position; harvest real tokens after."""
+        """One jitted dispatch: a block of scan ticks across all slots,
+        each at its own position; harvest real tokens after."""
         runnable = [s for s in range(self.slots)
                     if active[s] is not None and decoding[s]]
+        block = self._decode_block_size(len(runnable))
+        self.metrics["decode_block_last"] = block
         if self.kv is not None:
-            for s in runnable:
+            # Pending copy-on-write pairs (prefix bootstrap: the next
+            # append lands inside a shared page) — resolve them to
+            # (src, dst) physical pages now so the dispatch copies the
+            # shared page onto the private one before the scan; the
+            # re-uploaded table already points at dst.
+            cow_src = np.full(self.slots, NULL_PAGE, np.int32)
+            cow_dst = np.full(self.slots, NULL_PAGE, np.int32)
+            for s in list(runnable):
                 r = active[s]
-                # Allocate only what the request's remaining budget can
-                # validly read back: scan ticks past the budget write
-                # into unallocated positions, which route to the NULL
-                # page, and their outputs are discarded below.
-                h = min(self.decode_block,
-                        r.max_new_tokens - len(r.out_tokens))
-                self.kv.ensure(s, min(int(pos[s]) + h, self.max_len))
+                try:
+                    if self._cow[s] is not None:
+                        cow_src[s], cow_dst[s] = self.kv.cow_page(
+                            s, self._cow[s])
+                        self._cow[s] = None
+                        self.metrics["cow_copies"] += 1
+                        # The slot's reference moved off the shared src:
+                        # refresh its eviction entry.
+                        self.prefix.page_released(int(cow_src[s]))
+                    # Allocate only what the request's remaining budget
+                    # can validly read back: scan ticks past the budget
+                    # write into unallocated positions, which route to
+                    # the NULL page, and their outputs are discarded
+                    # below.
+                    h = min(block, r.max_new_tokens - len(r.out_tokens))
+                    self.kv.ensure(s, min(int(pos[s]) + h, self.max_len))
+                except RuntimeError as e:
+                    # Pool pressure even after eviction — e.g. every
+                    # page referenced across slots while a bootstrap COW
+                    # needs its one transient extra page.  Fail THIS
+                    # request (pages returned exactly once via the
+                    # refcounted release) and keep the stream alive —
+                    # same contract as the chunk path.
+                    r.failed = True
+                    r.error = str(e)
+                    self.metrics["rejected"] += 1
+                    self._retire(s, r, active, decoding, pos, tok)
+                    cow_src[s] = cow_dst[s] = NULL_PAGE
+            runnable = [s for s in runnable
+                        if active[s] is not None and decoding[s]]
+            if not runnable:
+                return
             # Idle slots AND slots parked mid-prefill ride along with
             # their write position at the table extent: paged_append
             # routes those writes to the NULL page, so a half-prefilled
@@ -536,31 +787,35 @@ class ServingEngine:
                 next_tok, cache, toks = self._decode(
                     self.params, jnp.asarray(tok), self._slot_cache,
                     self.kv.page_table, jnp.asarray(dpos),
-                    jnp.asarray(dlen))
+                    jnp.asarray(dlen), jnp.asarray(cow_src),
+                    jnp.asarray(cow_dst), block)
         else:
             with self._mesh_ctx():
                 next_tok, cache, toks = self._decode(
                     self.params, jnp.asarray(tok), self._slot_cache,
-                    jnp.asarray(pos), jnp.asarray(pos))
+                    jnp.asarray(pos), jnp.asarray(pos), block)
         self._slot_cache = cache
         toks_np = np.asarray(toks)                   # [N, slots]
         last_np = np.asarray(next_tok)               # [slots, 1]
         useful = 0
         for s in runnable:
             r = active[s]
-            h = min(self.decode_block,
+            h = min(block,
                     r.max_new_tokens - len(r.out_tokens),
                     self.max_len - int(pos[s]))
             r.out_tokens.extend(int(t) for t in toks_np[:h, s])
+            if r.out_tokens and r.first_token_at <= 0.0:
+                # Bootstrap-admitted slots emit their first token here.
+                r.first_token_at = time.perf_counter()
             useful = max(useful, h)
             self.metrics["generated"] += h
-            pos[s] = min(int(pos[s]) + self.decode_block, self.max_len)
+            pos[s] = min(int(pos[s]) + block, self.max_len)
             tok[s, 0] = last_np[s, 0]
             if (len(r.out_tokens) >= r.max_new_tokens
                     or pos[s] >= self.max_len):
                 self._retire(s, r, active, decoding, pos, tok)
         self.metrics["dispatches"] += 1
         self.metrics["ticks"] += useful
-        self.metrics["scan_ticks"] += self.decode_block
+        self.metrics["scan_ticks"] += block
         self.decode_eff = (0.5 * self.decode_eff
-                           + 0.5 * useful / self.decode_block)
+                           + 0.5 * useful / block)

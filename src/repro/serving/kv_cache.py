@@ -16,6 +16,17 @@ K/V per layer group.  This module pages it, vLLM/TensorRT-LLM style:
   * Pages are allocated from a host-side free list as a slot's sequence
     grows and returned when the request finishes — bytes-in-use is
     ``pages_in_use * page_bytes``, not ``slots * max_len`` worst case.
+  * Allocation is REFCOUNTED (DESIGN.md §10): several slots may reference
+    the same physical page (a shared prompt prefix), and the prefix cache
+    (``serving/prefix_cache.py``) may hold a page *cached* after every
+    referencing slot exits.  A page is therefore in exactly one of three
+    states — free (on the free list), referenced (``refs > 0``), or
+    cached (tree-owned, ``refs == 0``, reclaimed lazily through the
+    ``evictor`` hook when the free list runs dry) — and
+    ``assert_page_accounting`` checks that partition.  Shared pages are
+    never written in place: the first divergent write goes through a
+    copy-on-write page swap (``cow_page`` + the ``cow_src``/``cow_dst``
+    operands of ``paged_append``/``place_chunk_pages``).
   * Non-sequence state leaves (SSM / conv / wkv / token-shift) carry no
     sequence axis; they stay slot-contiguous ``[G, slots, ...]`` and are
     whole-replaced per slot.  Leaf classification comes from the shared
@@ -30,7 +41,7 @@ run them inside donated jits, and ``models/model.py`` calls
 
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,8 +83,26 @@ def from_page_major(seq: jax.Array, layout: str) -> jax.Array:
     return seq
 
 
+def cow_copy_pool(pool: jax.Array, src: jax.Array,
+                  dst: jax.Array) -> jax.Array:
+    """Copy physical page(s) ``src`` onto ``dst`` inside a pool.
+
+    pool: [P, page_size, H, hd]; src/dst: int32 scalars or [N] vectors of
+    physical page ids.  The copy-on-write primitive: a shared page is
+    duplicated into a freshly allocated one *before* the first divergent
+    write, so the writer mutates its private copy and every other
+    referent keeps reading the original.  Slots with nothing to copy pass
+    ``src == dst == NULL_PAGE`` — the NULL page is copied onto itself, a
+    no-op (duplicate NULL entries in a vectorized call all write the same
+    content, so the scatter stays deterministic).
+    """
+    return pool.at[dst].set(pool[src])
+
+
 def paged_append(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
-                 new: jax.Array, *, layout: str) -> jax.Array:
+                 new: jax.Array, *, layout: str,
+                 cow_src: Optional[jax.Array] = None,
+                 cow_dst: Optional[jax.Array] = None) -> jax.Array:
     """Scatter one decode token per slot into its page.
 
     pool: [P, page_size, H, hd]; page_table: [B, max_pages] int32;
@@ -84,9 +113,20 @@ def paged_append(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
     capacity while it is still prefilling) lands in the sacrificial page
     instead of silently rewriting the slot's last real KV row.  The
     scatter is therefore always in bounds and never corrupts live data.
+
+    Copy-on-write path: when a slot's write position lands inside a page
+    it does NOT own exclusively (a prefix-shared page — including the
+    partial-last-page case where a prompt ends mid-page and decode
+    appends into the shared tail page), pass per-slot ``cow_src`` /
+    ``cow_dst`` [B] vectors: each slot's ``cow_src`` page is copied onto
+    its ``cow_dst`` page *before* the scatter (``NULL_PAGE`` pairs no-op),
+    and ``page_table`` must already point at ``cow_dst`` so the write —
+    and every later read — resolves to the private copy.
     """
     page_size = pool.shape[1]
     b = page_table.shape[0]
+    if cow_src is not None:
+        pool = cow_copy_pool(pool, cow_src, cow_dst)
     tok = to_page_major(new, layout)[:, 0]                 # [B, H, hd]
     extent = page_table.shape[1] * page_size
     in_range = jnp.logical_and(pos >= 0, pos < extent)
@@ -164,7 +204,9 @@ def place_prefill(cache: Tree, fresh: Tree, slot: jax.Array,
 
 
 def place_chunk_pages(pool: jax.Array, seq: jax.Array,
-                      chunk_pages: jax.Array, *, layout: str) -> jax.Array:
+                      chunk_pages: jax.Array, *, layout: str,
+                      cow_src: Optional[jax.Array] = None,
+                      cow_dst: Optional[jax.Array] = None) -> jax.Array:
     """Page-aligned incremental prefill placement: write ONE chunk's K/V
     into its physical pages.
 
@@ -177,8 +219,18 @@ def place_chunk_pages(pool: jax.Array, seq: jax.Array,
     ``chunk_pages`` past the slot's capacity carry the NULL page and land
     in the sacrificial page (pad tokens of the final chunk).  Runs inside
     a donated jit: the scatter updates the pool in place.
+
+    Copy-on-write path: when the chunk's span includes a page the slot
+    claimed from the prefix cache rather than allocating fresh (a prompt
+    whose divergence point sits mid-page), pass scalar ``cow_src`` /
+    ``cow_dst``: the shared page is copied onto the private ``cow_dst``
+    page before the chunk scatter (``NULL_PAGE`` pair no-ops), keeping
+    the state machine uniform — a shared page is never a scatter target;
+    ``chunk_pages`` must already carry ``cow_dst``.
     """
     page_size = pool.shape[1]
+    if cow_src is not None:
+        pool = cow_copy_pool(pool, cow_src, cow_dst)
     x = to_page_major(seq, layout)[0]                      # [C, H, hd]
     c, h, hd = x.shape
     chunks = x.reshape(c // page_size, page_size, h, hd)
@@ -189,7 +241,9 @@ def stage_chunk(prompt: np.ndarray, off: int, chunk: int,
                 row: np.ndarray, page_size: int):
     """Host-side staging of one prefill chunk for ``prefill_chunk``.
 
-    prompt: [S] tokens; off: chunk start (a multiple of ``chunk``); row:
+    prompt: [S] tokens; off: chunk start — any PAGE-aligned offset (the
+    prefix cache resumes prefill at the first non-cached page, which
+    need not sit on the chunk grid); row:
     the slot's page-table row (after ``ensure``); returns ``(tokens
     [chunk] zero-padded past the prompt, chunk_pages [chunk // page_size]
     physical ids with NULL past the table extent, last_idx)`` where
@@ -233,13 +287,36 @@ def paged_cache_defs(cfg: ModelConfig, slots: int, max_len: int,
 
 
 class PagedKVCache:
-    """Device page pools + page table + host-side free-list allocator.
+    """Device page pools + page table + host-side refcounted allocator.
 
     The device state (``cache`` pytree, ``page_table``) flows through the
     engine's donated dispatches; this object owns the *allocation* state:
     which physical pages belong to which slot, and which are free.  The
     page table itself is kept as host numpy (tiny) and re-uploaded per
     dispatch — allocation happens between dispatches, never inside jit.
+
+    Ownership is refcounted so the prefix cache can point several slots
+    at one physical page (DESIGN.md §10).  Page states:
+
+      * **free** — on ``_free``, ``refs == 0``, not tree-owned.
+      * **referenced** — ``refs`` = number of slots whose table rows
+        carry the page.  ``ensure`` allocates exclusively (``refs = 1``);
+        ``adopt_shared`` claims an existing page (``refs += 1``).
+      * **cached** — ``refs == 0`` but owned by the prefix tree
+        (``mark_tree``): the page keeps its K/V after every referencing
+        slot exited, and is reclaimed through ``evict_page`` (driven by
+        the ``evictor`` hook when the free list runs dry).
+
+    ``release`` moves a slot's references down exactly once: a page drops
+    to the free list only when its refcount hits zero AND the tree does
+    not own it — a shared or cached page can therefore never be
+    double-freed, and ``assert_page_accounting`` verifies the partition
+    (every physical page in exactly one state, the free list duplicate-
+    free, refcounts equal to actual table occupancy).
+
+    Bytes accounting counts a shared page ONCE: ``pages_in_use`` is the
+    number of *distinct* referenced pages, so the paged-memory metrics
+    (and the per-shard split under a mesh) report physical truth.
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
@@ -298,6 +375,15 @@ class PagedKVCache:
         self._table = np.zeros((slots, self.pages_per_slot), np.int32)
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
         self._owned: List[List[int]] = [[] for _ in range(slots)]
+        # Refcounts (slot references per physical page) + the set of
+        # pages the prefix tree owns (kept out of the free list at ref 0).
+        self._refs = np.zeros(self.num_pages, np.int64)
+        self._in_use = 0            # distinct pages with refs > 0,
+        #                             maintained on 0<->1 transitions
+        self._tree: set = set()
+        # Called when the free list runs dry: must reclaim >= 1 cached
+        # page (via ``evict_page``) and return True, or return False.
+        self.evictor: Optional[Callable[[], bool]] = None
         self.peak_pages = 0
 
     def init_cache(self) -> Tree:
@@ -325,11 +411,38 @@ class PagedKVCache:
 
     @property
     def pages_in_use(self) -> int:
-        return sum(len(o) for o in self._owned)
+        """Distinct physical pages referenced by slots — a page shared by
+        k slots counts ONCE (it exists once in the pools).  Maintained
+        incrementally on refcount 0<->1 transitions (the allocation hot
+        path reads it per page via the peak update)."""
+        return self._in_use
+
+    def _ref(self, page: int) -> None:
+        if self._refs[page] == 0:
+            self._in_use += 1
+        self._refs[page] += 1
+
+    def _deref(self, page: int) -> None:
+        self._refs[page] -= 1
+        assert self._refs[page] >= 0, f"double release of page {page}"
+        if self._refs[page] == 0:
+            self._in_use -= 1
+            if page not in self._tree:
+                self.free_page(page)
+
+    @property
+    def pages_cached(self) -> int:
+        """Tree-owned pages no slot references: K/V kept warm for future
+        prefix hits, reclaimable by eviction."""
+        return sum(1 for p in self._tree if self._refs[p] == 0)
 
     @property
     def bytes_in_use(self) -> int:
         return self.pages_in_use * self.page_bytes
+
+    @property
+    def bytes_cached(self) -> int:
+        return self.pages_cached * self.page_bytes
 
     @property
     def peak_bytes_in_use(self) -> int:
@@ -354,13 +467,35 @@ class PagedKVCache:
         or past this routes to the NULL page in ``paged_append``)."""
         return self.pages_per_slot * self.page_size
 
+    def page_refs(self, page: int) -> int:
+        return int(self._refs[page])
+
     # ------------------------------------------------------- allocation
+    def alloc_page(self) -> int:
+        """Pop one free page, evicting cached prefix pages through the
+        ``evictor`` hook when the free list is dry.  Raises when every
+        page is referenced — steady-state demand fits the pool (per-slot
+        demand caps at ``pages_per_slot`` and sharing only lowers it),
+        but a copy-on-write needs ONE transient extra page while both
+        src and dst are live, so a fully-referenced pool can legally
+        fail here; callers on the serving path catch and fail the one
+        request instead of the stream."""
+        while not self._free:
+            if self.evictor is None or not self.evictor():
+                raise RuntimeError(
+                    f"KV page pool exhausted ({self.num_pages - 1} pages)")
+        return self._free.pop()
+
+    def free_page(self, page: int) -> None:
+        assert self._refs[page] == 0 and page != NULL_PAGE
+        self._free.append(page)
+
     def ensure(self, slot: int, length: int) -> np.ndarray:
         """Allocate pages so ``slot`` can hold ``length`` tokens; returns
         the slot's physical pages.  ``length`` beyond ``max_len`` raises —
-        the pool is sized for ``slots * max_len`` exactly, so with that
-        contract enforced the free list cannot run dry (the RuntimeError
-        below is an internal-invariant guard, not an expected error)."""
+        the pool is sized for ``slots * max_len`` exactly.  Logical pages
+        already populated (freshly allocated earlier, or prefix-shared
+        via ``adopt_shared``) are kept; only the tail is allocated."""
         if length > self.max_len:
             raise ValueError(
                 f"cannot ensure {length} tokens: slot capacity is "
@@ -368,18 +503,103 @@ class PagedKVCache:
         need = cdiv(max(length, 1), self.page_size)
         owned = self._owned[slot]
         while len(owned) < need:
-            if not self._free:
-                raise RuntimeError(
-                    f"KV page pool exhausted ({self.num_pages - 1} pages)")
-            page = self._free.pop()
+            page = self.alloc_page()
+            self._ref(page)
             self._table[slot, len(owned)] = page
             owned.append(page)
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         return self.slot_pages(slot)
 
+    def adopt_shared(self, slot: int, page: int) -> int:
+        """Claim an existing (tree-cached or other-slot) page as this
+        slot's next logical page: bump its refcount and write the shared
+        physical id straight into the slot's table row.  Returns the
+        logical index.  Prefix pages are adopted in walk order BEFORE any
+        ``ensure`` so logical order matches token order."""
+        owned = self._owned[slot]
+        logical = len(owned)
+        self._ref(page)
+        self._table[slot, logical] = page
+        owned.append(page)
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return logical
+
+    def cow_page(self, slot: int, logical: int) -> Tuple[int, int]:
+        """Copy-on-write swap: replace the slot's shared logical page
+        with a fresh exclusive one.  Returns ``(src, dst)`` physical ids
+        for the in-jit page copy (``cow_src``/``cow_dst`` operands); the
+        host table row already points at ``dst`` when this returns.  The
+        slot's reference MOVES: ``src`` drops one ref (staying cached if
+        the tree owns it), ``dst`` starts at one."""
+        src = self._owned[slot][logical]
+        dst = self.alloc_page()
+        self._ref(dst)
+        self._deref(src)               # stays cached when tree-owned
+        self._owned[slot][logical] = dst
+        self._table[slot, logical] = dst
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return src, dst
+
+    # ------------------------------------------------- tree page custody
+    def mark_tree(self, page: int) -> None:
+        """Hand custody of a page to the prefix tree: at refcount zero it
+        stays CACHED (not freed) until ``evict_page`` reclaims it."""
+        self._tree.add(page)
+
+    def evict_page(self, page: int) -> None:
+        """Tree eviction: reclaim a cached (ref-0, tree-owned) page."""
+        assert page in self._tree and self._refs[page] == 0
+        self._tree.discard(page)
+        self.free_page(page)
+
+    def disown(self, page: int) -> None:
+        """Revoke tree custody WITHOUT freeing: a pruned subtree's
+        still-referenced pages keep serving their slots and return to
+        the free list normally when the last reference drops."""
+        self._tree.discard(page)
+
     def release(self, slot: int) -> None:
-        """Return a finished slot's pages to the free list and point its
-        table row back at the NULL page."""
-        self._free.extend(reversed(self._owned[slot]))
+        """Drop a finished slot's page references exactly once and point
+        its table row back at the NULL page.  Exclusive pages return to
+        the free list; shared pages just lose one reference; tree-owned
+        pages stay cached at refcount zero (the prefix tree keeps their
+        K/V warm until memory pressure evicts them).  Idempotent: a
+        second release of the same slot is a no-op (``_owned`` already
+        empty), so an engine error path can never double-free."""
+        for page in reversed(self._owned[slot]):
+            self._deref(page)
         self._owned[slot] = []
         self._table[slot, :] = NULL_PAGE
+
+    # ------------------------------------------------------- invariants
+    def assert_page_accounting(self) -> None:
+        """Free-list / refcount / tree partition invariant (used by the
+        churn tests and the engine's debug hooks).
+
+        Every physical page (except NULL) is in exactly one state:
+        free, referenced (refs > 0), or cached (tree-owned at refs 0);
+        the free list holds no duplicates and nothing referenced or
+        tree-owned; refcounts equal actual slot-table occupancy."""
+        free = list(self._free)
+        free_set = set(free)
+        assert len(free) == len(free_set), "free list holds duplicates"
+        assert NULL_PAGE not in free_set, "NULL page on the free list"
+        counts = np.zeros(self.num_pages, np.int64)
+        for owned in self._owned:
+            for page in owned:
+                counts[page] += 1
+        assert np.array_equal(counts, self._refs), \
+            "refcounts disagree with slot ownership"
+        referenced = {p for p in range(1, self.num_pages)
+                      if self._refs[p] > 0}
+        assert self._in_use == len(referenced), \
+            "incremental in-use counter drifted"
+        cached = {p for p in self._tree if self._refs[p] == 0}
+        assert not (free_set & referenced), "referenced page on free list"
+        assert not (free_set & cached), "cached page on free list"
+        assert free_set | referenced | cached \
+            == set(range(1, self.num_pages)), "page leaked (no state)"
+        # Table rows mirror ownership: owned prefix, NULL beyond.
+        for slot, owned in enumerate(self._owned):
+            assert list(self._table[slot, :len(owned)]) == owned
+            assert np.all(self._table[slot, len(owned):] == NULL_PAGE)

@@ -1,0 +1,361 @@
+"""Prefix cache: radix-tree page sharing for the paged KV pools.
+
+StreamTensor's thesis is that external-memory traffic is the bottleneck;
+the serving corollary is that KV for a shared prompt prefix should be
+computed and stored ONCE.  The paged cache (DESIGN.md §8a) already makes
+the page the unit of ownership, so sharing is a bookkeeping problem, not
+a data-movement one: this module maintains a token-keyed radix tree over
+*whole KV pages* — node key = one page-aligned chunk of token ids,
+payload = the physical page holding that chunk's K/V — and a newly
+admitted request walks the tree, claims every matching prefix page by
+bumping its refcount and writing the shared physical id straight into
+its page-table row, then runs chunked prefill only from the first
+non-cached page onward.  TTFT for a hot prefix drops to roughly the cost
+of the divergent tail.
+
+Sharing is exact for every attention variant served here (dense, GQA,
+sliding-window): a KV row at position ``p`` is a pure function of tokens
+``0..p`` and the absolute position, and a claimed page sits at the SAME
+logical positions in the claiming slot, so the gathered values are the
+values a cold prefill would have produced.
+
+Two matching granularities:
+
+  * **chunk-aligned** (default, bit-exact) — the prefill restart offset
+    is rounded DOWN to the engine's chunk grid and only pages below it
+    are claimed.  Every page in the tree was then computed by the one
+    compiled ``prefill_chunk`` program at a canonical grid offset, so a
+    hot request's outputs are bit-identical to its cold-start run (chunk
+    boundaries change floating-point summation order; keeping one grid
+    keeps one answer).
+  * **bootstrap** (``bootstrap=True``, page-granular) — claims every
+    matching page, plus the *partial tail page* when a prompt ends
+    mid-page inside a cached run.  A prompt whose cached coverage
+    reaches ``plen - 1`` tokens skips prefill entirely: the engine feeds
+    the final prompt token through the decode path, whose first append
+    lands inside the shared last page and triggers the copy-on-write
+    swap (``kv_cache.cow_page`` + the in-dispatch page copy).  Maximum
+    reuse, one-decode-step TTFT, at the cost of ulp-level (not
+    token-level, in practice) divergence from the cold trace.
+
+Custody and eviction: a slot's full prompt pages are inserted into the
+tree when its prefill completes (``mark_tree``), so concurrent requests
+share with still-active ones.  On slot exit the references drop but the
+pages STAY CACHED at refcount zero; when the allocator's free list runs
+dry it calls ``evict_lru_leaf`` (wired via ``PagedKVCache.evictor``),
+which reclaims the least-recently-stamped unreferenced leaf through a
+stamp-keyed LRU heap (no tree walk on the allocation path).  Because
+``extend_claim`` lets a same-wave request adopt only a *suffix* of a
+chain, an unreferenced ancestor can sit above referenced descendants;
+when no unreferenced leaf exists, eviction prunes the LRU unreferenced
+subtree instead — cached pages free, still-referenced pages just lose
+tree custody and free when their slots exit — so eviction always makes
+progress while any tree page is unreferenced.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .kv_cache import NULL_PAGE, PagedKVCache, cdiv
+
+
+class _Node:
+    """One radix-tree node: a page-aligned token chunk -> physical page."""
+
+    __slots__ = ("key", "page", "children", "parent", "stamp", "dead")
+
+    def __init__(self, key: Optional[Tuple[int, ...]], page: int,
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.page = page
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.stamp = 0
+        self.dead = False
+
+
+@dataclass
+class PrefixHit:
+    """Outcome of one admission walk (already applied to the allocator).
+
+    ``prefill_start`` is the page-aligned token offset chunked prefill
+    resumes at; ``hit_pages`` the pages claimed (KV reused verbatim);
+    ``cow`` is the LOGICAL page index whose first divergent write must
+    swap in a private copy first (the physical src is whatever the
+    slot's table row holds when the write happens — ``cow_page``
+    re-derives it, so no stale copy of allocator state rides along);
+    ``full`` marks a bootstrap-mode full hit (cached coverage >=
+    plen - 1: skip prefill, emit the first token through the decode
+    path)."""
+
+    prefill_start: int
+    hit_pages: int
+    prompt_pages: int
+    cow: Optional[int] = None
+    full: bool = False
+
+
+class PrefixCache:
+    """Radix tree over whole KV pages + LRU eviction + claim bookkeeping.
+
+    Owns the token->page index and the per-slot list of held nodes; all
+    refcount/free-list state lives in the ``PagedKVCache`` it wraps (the
+    tree registers itself as the allocator's ``evictor``)."""
+
+    def __init__(self, kv: PagedKVCache, *, chunk: Optional[int] = None,
+                 bootstrap: bool = False):
+        if chunk is None:
+            chunk = kv.page_size
+        if chunk % kv.page_size != 0:
+            raise ValueError(
+                f"chunk {chunk} is not a multiple of page_size "
+                f"{kv.page_size}")
+        self.kv = kv
+        self.chunk = chunk
+        self.bootstrap = bootstrap
+        self.root = _Node(None, NULL_PAGE, None)
+        self._held: List[Set[_Node]] = [set() for _ in range(kv.slots)]
+        # Eviction index: a stamp-keyed min-heap with lazy invalidation
+        # (every _stamp pushes; pops skip dead/stale entries), plus a
+        # physical-page -> node map so a refcount drop outside the
+        # release path (COW) can refresh the node's heap entry.
+        self._lru: List[Tuple[int, int, _Node]] = []
+        self._by_page: Dict[int, _Node] = {}
+        self._tick = 0
+        self.nodes = 0
+        self.evictions = 0
+        kv.evictor = self.evict_lru_leaf
+
+    # ------------------------------------------------------------- walk
+    def _key(self, prompt: np.ndarray, i: int) -> Tuple[int, ...]:
+        ps = self.kv.page_size
+        return tuple(int(t) for t in prompt[i * ps:(i + 1) * ps])
+
+    def _walk(self, prompt: np.ndarray) -> List[_Node]:
+        """Match the prompt's full page chunks from the root; returns the
+        (possibly empty) chain of matching nodes."""
+        node, out = self.root, []
+        for i in range(int(prompt.shape[0]) // self.kv.page_size):
+            child = node.children.get(self._key(prompt, i))
+            if child is None:
+                break
+            out.append(child)
+            node = child
+        return out
+
+    def lookup_pages(self, prompt: np.ndarray) -> int:
+        """Pages a claim would reuse — the ``admission="prefix"`` score.
+        Pure lookup: no refcounts move."""
+        return len(self._walk(prompt))
+
+    # ------------------------------------------------------------ claim
+    def claim(self, slot: int, prompt: np.ndarray) -> PrefixHit:
+        """Admission-time prefix walk: claim matching pages into the
+        slot's table row (refcount bumps via ``adopt_shared``) and decide
+        where prefill resumes.  See the module docstring for the two
+        granularities."""
+        ps = self.kv.page_size
+        plen = int(prompt.shape[0])
+        full, r = plen // ps, plen % ps
+        matched = self._walk(prompt)
+        m = len(matched)
+        cow: Optional[int] = None
+        full_hit = False
+
+        if self.bootstrap:
+            claim_nodes = list(matched)
+            covered = m * ps
+            if m == full and r > 0:
+                # Partial-last-page: a cached run that extends past this
+                # prompt holds its tail rows — claim that child page too
+                # when its first ``r`` tokens match.
+                tail = tuple(int(t) for t in prompt[full * ps:plen])
+                parent = matched[-1] if matched else self.root
+                for key, child in parent.children.items():
+                    if key[:r] == tail:
+                        claim_nodes.append(child)
+                        covered = plen
+                        break
+            full_hit = bool(claim_nodes) and covered >= plen - 1
+            prefill_start = plen if full_hit else m * ps
+            if full_hit:
+                # Decode's first append (position plen - 1) — does it
+                # land inside a claimed page?  (At r == 1 the write opens
+                # a fresh page: no copy needed.)
+                j = (plen - 1) // ps
+                if j < len(claim_nodes):
+                    cow = j
+        else:
+            # Bit-exact: restart on the chunk grid so every page the
+            # request computes (and later inserts) comes from the one
+            # canonical chunk schedule; claim only pages below it.
+            cs = (min(m * ps, plen - 1) // self.chunk) * self.chunk
+            claim_nodes = matched[: cs // ps]
+            prefill_start = cs
+
+        for node in claim_nodes:
+            self.kv.adopt_shared(slot, node.page)
+            self._stamp(node)
+            self._held[slot].add(node)
+        return PrefixHit(prefill_start=prefill_start,
+                         hit_pages=len(claim_nodes),
+                         prompt_pages=cdiv(plen, ps), cow=cow,
+                         full=full_hit)
+
+    def extend_claim(self, slot: int, prompt: np.ndarray,
+                     off: int) -> Tuple[int, int]:
+        """Mid-prefill catch-up walk: a request admitted alongside the
+        one that is COMPUTING its prefix sees the tree only fill up
+        after its own prefill started.  Called before each chunk
+        dispatch, this re-walks the tree and — when pages covering
+        chunks at/after ``off`` have appeared — claims them and jumps
+        the prefill offset past them (chunk-aligned, capped at
+        ``plen - 1`` so the final chunk still runs for logits).  Returns
+        ``(new_off, pages_claimed)``; ``(off, 0)`` when nothing new
+        matched."""
+        ps = self.kv.page_size
+        plen = int(prompt.shape[0])
+        if self.kv.slot_pages(slot).size * ps != off:
+            return off, 0            # mid-page/COW state: don't touch
+        matched = self._walk(prompt)
+        cs = (min(len(matched) * ps, plen - 1) // self.chunk) * self.chunk
+        if cs <= off:
+            return off, 0
+        claimed = 0
+        for j in range(off // ps, cs // ps):
+            node = matched[j]
+            self.kv.adopt_shared(slot, node.page)
+            self._stamp(node)
+            self._held[slot].add(node)
+            claimed += 1
+        return cs, claimed
+
+    # ----------------------------------------------------------- insert
+    def insert(self, slot: int, prompt: np.ndarray) -> int:
+        """Index the slot's full prompt pages when its prefill completes
+        (their contents are final from here on — decode appends strictly
+        past the prompt).  Already-claimed chunks are just re-stamped; a
+        chunk that raced a concurrent cold admission keeps the FIRST
+        inserted page (this slot's duplicate stays exclusive and frees
+        normally on exit).  Returns the number of nodes created."""
+        ps = self.kv.page_size
+        full = int(prompt.shape[0]) // ps
+        row = self.kv.slot_pages(slot)
+        node, created = self.root, 0
+        for i in range(full):
+            key = self._key(prompt, i)
+            child = node.children.get(key)
+            if child is None:
+                page = int(row[i])
+                child = _Node(key, page, node)
+                node.children[key] = child
+                self.kv.mark_tree(page)
+                self._by_page[page] = child
+                self.nodes += 1
+                created += 1
+            self._stamp(child)
+            if child.page == row[i]:
+                self._held[slot].add(child)
+            node = child
+        return created
+
+    # ---------------------------------------------------------- custody
+    def release_slot(self, slot: int) -> None:
+        """Slot exit: re-stamp the nodes it held (most-recently-used at
+        exit, so hot prefixes outlive cold ones — and the fresh heap
+        entries are what makes their now-unreferenced pages reachable by
+        eviction) and forget them.  The refcount drops happen in
+        ``PagedKVCache.release``; tree-owned pages stay cached there
+        until eviction."""
+        for node in self._held[slot]:
+            self._stamp(node)
+        self._held[slot] = set()
+
+    def page_released(self, page: int) -> None:
+        """A page reference dropped OUTSIDE the release path (the COW
+        swap moves a slot's reference off its shared src page): refresh
+        the node's heap entry so the now-maybe-unreferenced page stays
+        reachable by eviction."""
+        node = self._by_page.get(page)
+        if node is not None and not node.dead:
+            self._stamp(node)
+
+    def evict_lru_leaf(self) -> bool:
+        """Reclaim the least-recently-stamped unreferenced page.
+
+        Normal case: pop the LRU heap until a live, unreferenced LEAF
+        surfaces and evict it — amortized O(log n), no tree walk (every
+        path to refcount zero re-stamps the node, so an evictable page
+        always has a current heap entry).  Referenced entries are
+        dropped (their release will re-push); unreferenced INTERIOR
+        entries are kept aside and re-pushed.  When no unreferenced
+        leaf exists at all — possible since ``extend_claim`` lets a
+        request adopt only a SUFFIX of a chain, leaving unreferenced
+        ancestors above referenced descendants — the LRU unreferenced
+        interior node's whole subtree is pruned instead: its cached
+        pages free, its still-referenced pages merely lose tree custody
+        (``disown``) and return to the free list when their slots exit.
+        Returns False only when no tree page is unreferenced."""
+        repush: List[Tuple[int, int, _Node]] = []
+        best_interior: Optional[_Node] = None
+        victim: Optional[_Node] = None
+        while self._lru:
+            entry = heapq.heappop(self._lru)
+            stamp, _, node = entry
+            if node.dead or stamp != node.stamp:
+                continue                         # stale entry
+            if self.kv.page_refs(node.page) != 0:
+                continue                         # re-pushed on release
+            repush.append(entry)
+            if node.children:
+                if best_interior is None:
+                    best_interior = node         # LRU prune fallback
+                continue
+            victim = node
+            break
+        for entry in repush:
+            heapq.heappush(self._lru, entry)
+        if victim is None:
+            victim = best_interior
+        if victim is None:
+            return False
+        return self._prune(victim) > 0
+
+    def _prune(self, node: _Node) -> int:
+        """Detach ``node``'s subtree from the tree.  Unreferenced pages
+        are reclaimed; referenced ones are disowned (no longer shareable
+        — the walk can't reach them — but still valid for their slots).
+        Returns the number of pages freed."""
+        del node.parent.children[node.key]
+        freed = 0
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            n.dead = True
+            self._by_page.pop(n.page, None)
+            for held in self._held:
+                held.discard(n)
+            if self.kv.page_refs(n.page) == 0:
+                self.kv.evict_page(n.page)
+                freed += 1
+            else:
+                self.kv.disown(n.page)
+            self.nodes -= 1
+        self.evictions += freed
+        return freed
+
+    def _stamp(self, node: _Node) -> None:
+        self._tick += 1
+        node.stamp = self._tick
+        heapq.heappush(self._lru, (node.stamp, id(node), node))
+
+    # ------------------------------------------------------------ state
+    @property
+    def cached_pages(self) -> int:
+        return self.kv.pages_cached
