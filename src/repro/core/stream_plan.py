@@ -105,14 +105,15 @@ class LayerPlan:
     qkv: KernelChoice = EAGER        # ln1 + Q/K/V projections
     attention: KernelChoice = EAGER  # full-sequence attention
     decode_attn: KernelChoice = EAGER  # single-token paged attention
+    verify_attn: KernelChoice = EAGER  # W-token speculative verify window
     ffn: KernelChoice = EAGER        # ln2 + MLP / MoE
     mixer: KernelChoice = EAGER      # ssm_scan / wkv composite
 
     @property
     def any_fused(self) -> bool:
         return any(c.fused for c in
-                   (self.qkv, self.attention, self.decode_attn, self.ffn,
-                    self.mixer))
+                   (self.qkv, self.attention, self.decode_attn,
+                    self.verify_attn, self.ffn, self.mixer))
 
 
 @dataclass(frozen=True)
@@ -147,6 +148,17 @@ class StreamPlan:
                 return lp.decode_attn.kw.get("page_size", default)
         return default
 
+    def verify_window(self, draft_len: int) -> int:
+        """Speculative verify-window rows (pending token + drafts) for a
+        requested draft length — the window the ``verify_attn`` stage
+        should score per dispatch.  Clamped to the decode KV page granule
+        the compiler chose: a window never spans more than one page of
+        fresh K/V, so a verify dispatch touches at most one page boundary
+        and a rejected draft rolls back at most one freshly-opened page.
+        The engine quantizes the result onto its power-of-two decode
+        block ladder to cap compiled-program count."""
+        return max(2, min(int(draft_len) + 1, self.decode_page_size()))
+
     def prefill_chunk_size(self, page_size: int, default: int = 128) -> int:
         """Chunked-prefill granule: the tile the DSE chose for the
         attention op's QUERY stream (``block_q``), rounded UP to a whole
@@ -177,6 +189,7 @@ class StreamPlan:
                 kind: {"qkv": lp.qkv.implementation,
                        "attention": lp.attention.implementation,
                        "decode_attn": lp.decode_attn.implementation,
+                       "verify_attn": lp.verify_attn.implementation,
                        "ffn": lp.ffn.implementation,
                        "mixer": lp.mixer.implementation}
                 for kind, lp in self.layers
@@ -184,7 +197,7 @@ class StreamPlan:
             "sharding": {
                 kind: {stage: dict(getattr(lp, stage).sharding)
                        for stage in ("qkv", "attention", "decode_attn",
-                                     "ffn", "mixer")
+                                     "verify_attn", "ffn", "mixer")
                        if getattr(lp, stage).sharding}
                 for kind, lp in self.layers
             },
@@ -252,7 +265,7 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
     def fused_at(anchor: str) -> bool:
         return _group_impl(compiled, anchor) != "xla_fusion"
 
-    qkv = attention = decode_attn = ffn = mixer = EAGER
+    qkv = attention = decode_attn = verify_attn = ffn = mixer = EAGER
 
     if kind in ("attn", "local_attn", "global_attn", "mamba+shared_attn"):
         ab = f"{base}.shared" if kind == "mamba+shared_attn" else base
@@ -276,6 +289,12 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
             # attention streams the paged KV cache instead of a flash
             # grid; the KV-dim DSE tile becomes the page size.
             decode_attn = KernelChoice("paged_attention", (
+                ("page_size", _raw_tile(g, f"{ab}.attention", "s")),
+            ))
+            # Speculative-verify twin: the same paged stream scores a
+            # W-row draft window per dispatch; the page granule bounds
+            # how many rows one dispatch should amortize (verify_window).
+            verify_attn = KernelChoice("verify_attention", (
                 ("page_size", _raw_tile(g, f"{ab}.attention", "s")),
             ))
         mb = f"{ab}.moe" if cfg.is_moe else f"{ab}.mlp"
@@ -306,7 +325,8 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
             ))
 
     return LayerPlan(kind=kind, qkv=qkv, attention=attention,
-                     decode_attn=decode_attn, ffn=ffn, mixer=mixer)
+                     decode_attn=decode_attn, verify_attn=verify_attn,
+                     ffn=ffn, mixer=mixer)
 
 
 # ------------------------------------------------------------- sharding
@@ -362,6 +382,7 @@ def _mesh_claims(cfg: ModelConfig, mesh) -> Dict[str, Sharding]:
         "qkv": pairs(tokens=data, out=out_ax),
         "attention": pairs(batch=data, kv_heads=kv_heads),
         "decode_attn": pairs(batch=data, kv_heads=kv_heads),
+        "verify_attn": pairs(batch=data, kv_heads=kv_heads),
         "ffn": ffn,
         "mixer": mixer,
         "lm_head": pairs(tokens=data),
@@ -419,6 +440,7 @@ def _apply_mesh(cfg: ModelConfig, lp: LayerPlan, mesh,
     }))
     attention = _shard_choice(lp.attention, claims["attention"], {})
     decode_attn = _shard_choice(lp.decode_attn, claims["decode_attn"], {})
+    verify_attn = _shard_choice(lp.verify_attn, claims["verify_attn"], {})
     ffn_extent = cfg.num_experts if cfg.is_moe else cfg.d_ff
     ffn_dim = "experts" if cfg.is_moe else "d_ff"
     ffn = _shard_choice(lp.ffn, claims["ffn"], clips_for(claims["ffn"], {
@@ -427,7 +449,8 @@ def _apply_mesh(cfg: ModelConfig, lp: LayerPlan, mesh,
     }))
     mixer = _shard_choice(lp.mixer, claims["mixer"], {})
     return LayerPlan(kind=lp.kind, qkv=qkv, attention=attention,
-                     decode_attn=decode_attn, ffn=ffn, mixer=mixer)
+                     decode_attn=decode_attn, verify_attn=verify_attn,
+                     ffn=ffn, mixer=mixer)
 
 
 def build_stream_plan(cfg: ModelConfig, *, tokens: int,

@@ -11,12 +11,12 @@ from .ops import (block_matmul, convert_layout, flash_attention,
                   flash_attention_2d, mamba2_ssd_pallas, moe_experts_pallas,
                   rmsnorm_matmul, streamed_ffn, streamed_mlp,
                   streamed_xent_loss, streamed_xent_parts, wkv6_pallas)
-from .paged_attention import paged_decode_attention
+from .paged_attention import paged_decode_attention, paged_verify_attention
 
 __all__ = [
     "ref", "block_matmul", "convert_layout", "flash_attention",
     "flash_attention_2d", "mamba2_ssd_pallas", "moe_experts_pallas",
-    "paged_decode_attention", "rmsnorm_matmul", "streamed_ffn",
-    "streamed_mlp", "streamed_xent_loss", "streamed_xent_parts",
-    "wkv6_pallas",
+    "paged_decode_attention", "paged_verify_attention", "rmsnorm_matmul",
+    "streamed_ffn", "streamed_mlp", "streamed_xent_loss",
+    "streamed_xent_parts", "wkv6_pallas",
 ]

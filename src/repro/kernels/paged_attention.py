@@ -95,6 +95,143 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_verify_kernel(off_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page_size: int,
+                         n_pages: int, scale: float, window: int,
+                         win: int, g: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_off = off_ref[b]
+    page_start = j * page_size
+    # Page-level skip across the whole window: the deepest row (win-1)
+    # attends through q_off + win, the shallowest (row 0) starts its
+    # sliding window at q_off + 1 - window; pages outside that union are
+    # dead for every row.  Pages live for only SOME rows still run — the
+    # per-row mask turns them into exact no-ops for the others (p == 0,
+    # corr == 1), which is what keeps each row bit-identical to the
+    # single-token decode kernel at its own length.
+    run = page_start < q_off + win
+    if window:
+        run = jnp.logical_and(
+            run, page_start + page_size > q_off + 1 - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [win*G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [ps, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [win*G, ps]
+        rows = win * g
+        # Row i of the q block is query head (i % g) of window slot
+        # (i // g): its causal extent is q_off + (i // g) + 1.
+        q_idx = jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 0) // g
+        kv_pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 1)
+        qlen = q_off + q_idx + 1
+        mask = kv_pos < qlen
+        if window:
+            mask = jnp.logical_and(mask, kv_pos >= qlen - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # [ps, D]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           q_off: jax.Array, *, window: int = 0,
+                           scale: Optional[float] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """W-token speculative-verify attention against paged K/V pools.
+
+    q: [B, W, Hq, D] — the pending token plus W-1 draft candidates per
+    slot; k_pool/v_pool: [P, page_size, Hkv, D]; page_table:
+    [B, max_pages]; q_off: [B] absolute position of window row 0 (the
+    pending token's write position — row i attends causally through
+    ``q_off + i``, i.e. length ``q_off + i + 1``).  Returns
+    [B, W, Hq, D].
+
+    One dispatch scores all W positions: the decode kernel's grid and
+    online-softmax body, with the window's rows stacked into the query
+    block (kv-head-major, so K/V pages are still fetched once per kv
+    head for the whole window) and a per-row causal extent replacing the
+    shared length.  Each row's accumulator sequence is the one the
+    single-token kernel would produce at that row's length — pages a row
+    cannot see fold in as exact no-ops — so accepted tokens bit-match
+    non-speculative decode.
+    """
+    b, w, hq, d = q.shape
+    _, page_size, hkv, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    interpret = interpret_default() if interpret is None else interpret
+    dp = d if interpret else round_up(d, LANE)
+    if dp != d:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, dp - d)))
+        k_pool = jnp.pad(k_pool, ((0, 0), (0, 0), (0, 0), (0, dp - d)))
+        v_pool = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, dp - d)))
+    # [B, W, Hq, D] -> [B, Hkv, W*G, D]: kv-head-major with the window
+    # rows interleaved (row = w_idx * G + g_idx), so program (b, h) holds
+    # every (window slot, query head) pair sharing KV head h.
+    qk = q.reshape(b, w, hkv, g, dp).transpose(0, 2, 1, 3, 4) \
+          .reshape(b, hkv, w * g, dp)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # q_off, page_table
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, w * g, dp),
+                         lambda bi, hi, ji, off, tbl: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dp),
+                         lambda bi, hi, ji, off, tbl:
+                         (tbl[bi, ji], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1, dp),
+                         lambda bi, hi, ji, off, tbl:
+                         (tbl[bi, ji], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w * g, dp),
+                               lambda bi, hi, ji, off, tbl: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((w * g, 1), jnp.float32),
+            pltpu.VMEM((w * g, 1), jnp.float32),
+            pltpu.VMEM((w * g, dp), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_verify_kernel, page_size=page_size, n_pages=n_pages,
+            scale=scale, window=window, win=w, g=g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, w * g, dp), q.dtype),
+        interpret=interpret,
+    )(q_off.astype(jnp.int32), page_table.astype(jnp.int32),
+      qk, k_pool, v_pool)
+    return out.reshape(b, hkv, w, g, dp).transpose(0, 2, 1, 3, 4) \
+              .reshape(b, w, hq, dp)[..., :d]
+
+
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, page_table: jax.Array,
                            lengths: jax.Array, *, window: int = 0,

@@ -2,7 +2,8 @@
 
 from .model import (decode_step, forward_hidden, forward_train, prefill,
                     prefill_chunk, resolve_plan, streamed_xent,
-                    supports_chunked_prefill)
+                    supports_chunked_prefill, supports_speculative,
+                    verify_step)
 from .params import (KV_CACHE_LEAVES, STATE_CACHE_LEAVES, abstract_cache,
                      abstract_params, cache_defs, cache_leaf_kind,
                      cache_leaf_name, cache_logical_axes, init_cache,
@@ -12,7 +13,7 @@ from .params import (KV_CACHE_LEAVES, STATE_CACHE_LEAVES, abstract_cache,
 __all__ = [
     "decode_step", "forward_hidden", "forward_train", "prefill",
     "prefill_chunk", "resolve_plan", "streamed_xent",
-    "supports_chunked_prefill",
+    "supports_chunked_prefill", "supports_speculative", "verify_step",
     "KV_CACHE_LEAVES", "STATE_CACHE_LEAVES", "abstract_cache",
     "abstract_params", "cache_defs", "cache_leaf_kind", "cache_leaf_name",
     "cache_logical_axes", "init_cache", "init_params", "kv_seq_axis",

@@ -324,6 +324,48 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, hq, d).astype(q.dtype)
 
 
+def verify_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     q_off: jax.Array, *, window: int = 0,
+                     layout: str = "bshd") -> jax.Array:
+    """W-token speculative-verify attention (eager reference path).
+
+    q: [B, W, Hq, D] — the pending token plus W-1 draft candidates;
+    caches: [B, S, Hkv, D] ("bshd") or [B, Hkv, S, D] ("bhsd"); q_off:
+    [B] absolute position of window row 0, so row i's causal extent is
+    ``q_off + i + 1``.  The W-row twin of ``decode_attention`` under the
+    same numerics contract: scores in f32, f32 softmax, f32 PV — row i
+    computes exactly what ``decode_attention`` would at length
+    ``q_off + i + 1`` (extra cache rows score exact NEG_INF and drop out
+    of the softmax as exact zeros), which is what lets the engine accept
+    draft tokens without perturbing the greedy stream.
+    """
+    b, w, hq, d = q.shape
+    if layout == "bhsd":
+        hkv, s = k_cache.shape[1], k_cache.shape[2]
+    else:
+        s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = (q * (1.0 / math.sqrt(d))).reshape(b, w, hkv, g, d)
+    k_eq = "bhsd" if layout == "bhsd" else "bshd"
+    if layout == "bhsd":
+        scores = jnp.einsum(f"bqhgd,{k_eq}->bhgqs", qg,
+                            k_cache).astype(jnp.float32)
+    else:
+        scores = jnp.einsum(f"bqhgd,{k_eq}->bhgqs", qg, k_cache,
+                            preferred_element_type=jnp.float32)
+    pos = jnp.arange(s)
+    qlen = jnp.reshape(q_off, (-1, 1)) + jnp.arange(w)[None] + 1  # [B,W]
+    valid = pos[None, None] < qlen[..., None]                     # [B,W,S]
+    if window:
+        valid = jnp.logical_and(valid, pos[None, None]
+                                >= qlen[..., None] - window)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(f"bhgqs,{k_eq}->bqhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, w, hq, d).astype(q.dtype)
+
+
 # --------------------------------------------------------------------- #
 # FFN / MoE
 # --------------------------------------------------------------------- #
@@ -808,6 +850,33 @@ def fused_paged_attention(q: jax.Array, k_pool: jax.Array,
     else:
         DISPATCH_RECORDS["single"] += 1
     return call(q, k_pool, v_pool, page_table, lengths)
+
+
+def fused_verify_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           q_off: jax.Array, *, window: int = 0,
+                           shard=()) -> jax.Array:
+    """Speculative-verify attention under the plan's sharding: identical
+    dispatch contract to ``fused_paged_attention`` (KV pools split over
+    the model axis at ``kv_heads``, slots over 'data'), with the W-row
+    verify window riding in the query block — one kernel launch scores
+    every draft position of every slot.  Serving-only — no VJP pairing."""
+    from ..kernels import paged_verify_attention
+
+    def call(q, kp, vp, tbl, off):
+        return paged_verify_attention(q, kp, vp, tbl, off, window=window)
+
+    mesh = _shard_mesh(shard)
+    hax = _claim_axis(mesh, shard, "kv_heads", k_pool.shape[2])
+    bax = _claim_axis(mesh, shard, "batch", q.shape[0])
+    if hax or bax:
+        call = _smap(call, mesh,
+                     (P(bax, None, hax, None), P(None, None, hax, None),
+                      P(None, None, hax, None), P(bax, None), P(bax)),
+                     P(bax, None, hax, None))
+    else:
+        DISPATCH_RECORDS["single"] += 1
+    return call(q, k_pool, v_pool, page_table, q_off)
 
 
 def fused_mamba2_ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array,

@@ -956,3 +956,169 @@ def decode_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
     next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     new_cache = {"blocks": new_blocks, "rest": tuple(new_rest)}
     return next_tokens, logits, new_cache
+
+
+# --------------------------------------------------------------------- #
+# Speculative verify (draft-then-verify decode, DESIGN.md §11)
+# --------------------------------------------------------------------- #
+
+def supports_speculative(cfg: ModelConfig) -> bool:
+    """Whether ``verify_step`` can serve this config.
+
+    Speculative decode needs a rejected draft to be UNDOABLE: for paged
+    attention K/V that is a page-table edit (``rollback_extent``), but
+    SSM / conv / RWKV recurrent state folds every consumed token into a
+    dense carry that cannot be truncated, so hybrid stacks are out.  The
+    remaining constraints are the chunked-prefill ones: causal masking is
+    what scopes each window row to its own prefix, and mrope's 3-axis
+    positions don't extend along a scalar window offset.
+    """
+    return supports_chunked_prefill(cfg)
+
+
+def _attn_block_verify(cfg: ModelConfig, p: Tree, x: jax.Array,
+                       cache: Tree, cache_pos: jax.Array,
+                       lengths: jax.Array, *, window: int = 0,
+                       lplan: Optional[LPlan] = None,
+                       page_table: Optional[jax.Array] = None,
+                       ) -> Tuple[jax.Array, Tree]:
+    """One attention block over a W-token verify window, paged cache only.
+
+    x: [B, W, D] — the pending token plus W-1 draft candidates per slot;
+    ``cache_pos`` ([B] or scalar) is the window's first write position,
+    so K/V rows land at ``pos .. pos + W - 1`` and window row i attends
+    through position ``pos + i`` (its own token included), exactly the
+    extent single-token decode would see after consuming i accepted
+    tokens.  Rows past the accepted prefix leave stale K/V behind; the
+    engine truncates them via ``rollback_extent`` and the NEXT dispatch
+    overwrites them — in between they sit beyond every slot's length and
+    are therefore invisible to the masks.
+    """
+    if page_table is None:
+        raise NotImplementedError(
+            "verify_step requires the paged KV cache (rollback is a "
+            "page-table edit; the contiguous cache has no equivalent)")
+    from ..serving.kv_cache import (gather_pages, live_page_table,
+                                    paged_append_window)
+    b, w, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    layout = cfg.kv_cache_layout
+    ap = p["attn"]
+    q, k, v = _project_qkv(cfg, ap, x, p["ln1"], lplan)
+    q = q.reshape(b, w, hq, hd)
+    k = k.reshape(b, w, hkv, hd)
+    v = v.reshape(b, w, hkv, hd)
+    q, k = _qk_normed(cfg, ap, q, k)
+    pos0 = _decode_positions(cache_pos, b)
+    pos = pos0[:, None] + jnp.arange(w)[None]               # [B, W]
+    q = L.apply_positional(cfg.rope, q, pos, cfg.rope_theta)
+    k = L.apply_positional(cfg.rope, k, pos, cfg.rope_theta)
+    k_new = k.transpose(0, 2, 1, 3) if layout == "bhsd" else k
+    v_new = v.transpose(0, 2, 1, 3) if layout == "bhsd" else v
+    kc = paged_append_window(cache["k"], page_table, pos0, k_new,
+                             layout=layout)
+    vc = paged_append_window(cache["v"], page_table, pos0, v_new,
+                             layout=layout)
+    choice = lplan.verify_attn if lplan is not None else None
+    if choice is not None and choice.fused:
+        o = L.fused_verify_attention(q, kc, vc, page_table, lengths,
+                                     window=window, shard=choice.sharding)
+    else:
+        tbl_live = live_page_table(page_table, lengths + w,
+                                   cache["k"].shape[1])
+        o = L.verify_attention(
+            q, gather_pages(kc, tbl_live, layout=layout),
+            gather_pages(vc, tbl_live, layout=layout),
+            lengths, window=window, layout=layout)
+    x = x + o.reshape(b, w, hq * hd) @ ap["wo"]
+    x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
+    return x, {"k": kc, "v": vc}
+
+
+def _apply_block_verify(cfg: ModelConfig, kind: str, p: Tree, x: jax.Array,
+                        cache: Tree, cache_pos: jax.Array,
+                        lengths: jax.Array,
+                        lplan: Optional[LPlan] = None,
+                        page_table: Optional[jax.Array] = None,
+                        ) -> Tuple[jax.Array, Tree]:
+    if kind not in ("attn", "local_attn", "global_attn"):
+        raise NotImplementedError(
+            f"speculative verify does not support layer kind {kind!r} "
+            "(gate on supports_speculative)")
+    window = cfg.sliding_window if kind == "local_attn" else 0
+    return _attn_block_verify(cfg, p, x, cache, cache_pos, lengths,
+                              window=window, lplan=lplan,
+                              page_table=page_table)
+
+
+def verify_step(params: Tree, cfg: ModelConfig, tokens: jax.Array,
+                cache: Tree, cache_pos: jax.Array, lengths: jax.Array, *,
+                page_table: jax.Array,
+                plan: Optional[Plan] = None,
+                ) -> Tuple[jax.Array, jax.Array, Tree]:
+    """Score a W-token speculative window in ONE dispatch.
+
+    tokens: [B, W] int32 — column 0 the pending (already-committed) input
+    token, columns 1..W-1 the draft candidates; cache: paged pools;
+    cache_pos: window start write position ([B] or scalar); lengths: [B]
+    tokens already in the cache (== cache_pos on the serving path);
+    page_table: [B, max_pages].  Returns (greedy [B, W], logits
+    [B, W, Vp], new_cache): ``greedy[:, i]`` is the model's next token
+    after consuming ``tokens[:, :i+1]`` — the engine accepts draft
+    ``tokens[:, i]`` while it equals ``greedy[:, i-1]``, and every
+    accepted row's logits are the ones non-speculative decode would have
+    produced (the verify attention scopes row i to its own causal
+    prefix).  Sits between ``prefill_chunk`` and ``decode_step``: same
+    paged cache, same dynamic per-slot operands, one compiled program
+    per window size W.
+    """
+    if not supports_speculative(cfg):
+        raise NotImplementedError(
+            f"speculative verify unsupported for config {cfg.name!r}")
+    params = _cast_tree(cfg, params)
+    b, w = tokens.shape
+    pos_v = _decode_positions(cache_pos, b)
+    x = _c(cfg, jnp.take(params["embed"], tokens, axis=0))
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.rope == "none" and "pos_embed" in params:
+        pos = pos_v[:, None] + jnp.arange(w)[None]
+        x = x + jnp.take(_c(cfg, params["pos_embed"]), pos, axis=0)
+    plan = resolve_plan(cfg, b * w,
+                        kv_len=_cache_kv_len(cfg, cache, page_table),
+                        plan=plan)
+    period = len(cfg.layer_pattern)
+    groups = cfg.num_layers // period
+
+    def group_body(x, inp):
+        block_params, cache_g = inp
+        new_caches = []
+        for pidx in range(period):
+            kind = cfg.layer_pattern[pidx]
+            x, nc = _apply_block_verify(cfg, kind, block_params[pidx], x,
+                                        cache_g[pidx], pos_v, lengths,
+                                        lplan=_lplan(plan, kind),
+                                        page_table=page_table)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if groups > 0:
+        x, new_blocks = lax.scan(group_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    else:
+        new_blocks = ()
+    new_rest = []
+    for i, bp in enumerate(params["rest"]):
+        kind = cfg.layer_kind(groups * period + i)
+        c_i = jax.tree.map(lambda a: a[0], cache["rest"][i])
+        x, nc = _apply_block_verify(cfg, kind, bp, x, c_i, pos_v, lengths,
+                                    lplan=_lplan(plan, kind),
+                                    page_table=page_table)
+        new_rest.append(jax.tree.map(lambda a: a[None], nc))
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = (x @ _c(cfg, params["lm_head"])).astype(jnp.float32)
+    vp = logits.shape[-1]
+    logits = jnp.where((jnp.arange(vp) >= cfg.vocab_size)[None, None],
+                       -1e30, logits)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_cache = {"blocks": new_blocks, "rest": tuple(new_rest)}
+    return greedy, logits, new_cache

@@ -14,7 +14,7 @@ group axis for ``lax.scan``; remainder layers (L % period) are kept unstacked.
 Zamba2's shared attention block is a single unstacked copy (true parameter
 sharing).
 
-Sharding deviation (documented in DESIGN.md §11): tied input/output
+Sharding deviation (documented in DESIGN.md §13): tied input/output
 embeddings are stored untied — the input table shards over d_model (local
 gather) while the LM head shards over vocab (Megatron-style streamed CE) —
 because one array cannot carry both layouts without a per-step all-gather.
@@ -186,7 +186,7 @@ def model_defs(cfg: ModelConfig) -> Dict[str, Tree]:
     # so the token gather stays device-local; the feature dim shards over the
     # model axis instead ("embed_dim") and the activation all-gathers.  The
     # LM head shards over vocab for Megatron-style streamed CE.  This is why
-    # tied embeddings are stored untied (DESIGN.md §11).
+    # tied embeddings are stored untied (DESIGN.md §13).
     if cfg.frontend == "none" or not cfg.encoder_only:
         # Modality-frontend archs still embed generated tokens at decode.
         defs["embed"] = ParamDef((vp, d), ("embed_vocab", "embed_dim"),

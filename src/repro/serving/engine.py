@@ -81,6 +81,23 @@ Decode hot loop (§Perf):
     a half-prefilled slot's K/V survives interleaved decode blocks; their
     outputs are discarded on the host.
 
+Self-speculative decoding (DESIGN.md §11): with ``speculative=True`` the
+decode scan is replaced by draft-then-verify.  Each pass drafts up to
+``draft_len`` token guesses per slot from cheap host-side sources (the
+prefix-cache radix tree via ``PrefixCache.suggest``, then n-gram
+prompt-lookup over the slot's own history), stacks ``[pending, d1..dk]``
+into a ``[slots, W]`` window, and scores every position with ONE paged
+``verify_step`` dispatch.  A draft is accepted while it equals the
+previous row's greedy argmax — acceptance can only ever keep tokens the
+model itself would have produced, so greedy outputs are BIT-IDENTICAL to
+the non-speculative engine; a repetitive stretch delivers up to
+``draft_len + 1`` tokens per dispatch, a cold stretch still delivers one.
+Rejected rows leave K/V garbage past the new write head; wholly-stale
+pages roll back through ``PagedKVCache.rollback_extent`` (refcount-
+checked: draft pages are freshly allocated and never tree-adopted, so
+rollback can never free a shared prefix page).  Window widths come from
+a <=3-rung ladder, so the verify program compiles at most three times.
+
 Metrics count REAL work: ``generated`` is tokens actually delivered to
 requests (padding slots and past-budget scan ticks excluded), ``ticks``
 is the per-dispatch maximum of useful ticks, ``scan_ticks`` is what the
@@ -107,7 +124,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..distributed.context import use_mesh
 from ..models import (decode_step, init_cache, prefill, resolve_plan,
-                      supports_chunked_prefill)
+                      supports_chunked_prefill, supports_speculative,
+                      verify_step)
 from ..models import prefill_chunk as _model_prefill_chunk
 from ..models.params import cache_leaf_kind, cache_leaf_name
 from .kv_cache import (NULL_PAGE, PagedKVCache, cdiv, place_prefill,
@@ -148,6 +166,26 @@ class Request:
         return self.finished_at - self.submitted_at
 
 
+def _ngram_continuation(hist: np.ndarray, k: int) -> List[int]:
+    """Prompt-lookup drafting: find the most recent EARLIER occurrence of
+    the history's trailing n-gram (n = 3, then 2) and return up to ``k``
+    of the tokens that followed it.  Pure host work — one vectorized
+    sliding-window compare per n."""
+    n_tok = int(hist.shape[0])
+    for n in (3, 2):
+        if n_tok <= n:
+            continue
+        tail = hist[-n:]
+        # Windows over hist[:-1] end strictly before the last token, so
+        # the trailing n-gram can never match itself.
+        win = np.lib.stride_tricks.sliding_window_view(hist[:-1], n)
+        hits = np.nonzero((win == tail[None, :]).all(axis=1))[0]
+        if hits.size:
+            i = int(hits[-1])
+            return [int(t) for t in hist[i + n:i + n + k]]
+    return []
+
+
 def _place_cache_slot(cache: Tree, fresh: Tree, slot: jax.Array) -> Tree:
     """Write a batch-1 prefill cache into one slot of the contiguous cache.
 
@@ -177,6 +215,7 @@ class ServingEngine:
                  prefix_bootstrap: bool = False,
                  admission: str = "fifo",
                  adaptive_decode_block: bool = False,
+                 speculative: bool = False, draft_len: int = 4,
                  mesh=None):
         self.cfg = cfg
         self.mesh = mesh
@@ -200,7 +239,8 @@ class ServingEngine:
         # Trace-time probes: the traced bodies below bump these counters,
         # so they count PROGRAMS BUILT, not dispatches — the engine's
         # compile-storm signal.
-        self._traces: Dict[str, int] = {"prefill": 0, "decode": 0}
+        self._traces: Dict[str, int] = {"prefill": 0, "decode": 0,
+                                        "verify": 0}
         # EMA of per-dispatch useful-tick fraction — the adaptive prefill
         # budget's decode-pressure signal (1.0 = every scan tick useful).
         self.decode_eff = 1.0
@@ -230,6 +270,40 @@ class ServingEngine:
                 f"config {cfg.name!r} does not support chunked prefill "
                 "(SSM/RWKV state or mrope positions)")
         self.chunked = chunked
+
+        # Self-speculative decoding (DESIGN.md §11): draft cheap guesses
+        # on the host, score draft_len + 1 positions with one verify
+        # dispatch, keep the longest prefix matching the model's own
+        # greedy argmax.  Acceptance can only keep tokens greedy decode
+        # would have produced, so outputs bit-match the plain engine.
+        self.draft_len = int(draft_len)
+        if speculative:
+            if not paged:
+                raise ValueError("speculative decoding requires the paged "
+                                 "cache (rejection rolls back the slot's "
+                                 "page-table extent)")
+            if not supports_speculative(cfg):
+                raise ValueError(
+                    f"config {cfg.name!r} does not support speculative "
+                    "decoding (recurrent state cannot roll back)")
+            if self.draft_len < 1:
+                raise ValueError("draft_len must be >= 1")
+            if plan is not None:
+                # The plan clamps the verify window to its KV stream
+                # granule: a window wider than one page spans page
+                # boundaries mid-row for no measured gain.
+                self.draft_len = min(
+                    self.draft_len, plan.verify_window(self.draft_len) - 1)
+        self.speculative = bool(speculative)
+        # Verify-window ladder: each distinct width W is one compiled
+        # verify program, so per-pass widths snap UP to a <=3-rung ladder
+        # instead of tracking the exact draft count (which would compile
+        # once per distinct count).
+        self._w_ladder = tuple(sorted(
+            {2, self.draft_len // 2 + 1, self.draft_len + 1} - {0, 1}))
+        # Tests flip this on to run the allocator's full accounting
+        # audit after every rollback (churn soaks).
+        self._debug_check_pages = False
 
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
@@ -307,6 +381,29 @@ class ServingEngine:
         self._prefill = jax.jit(_prefill_into, donate_argnums=(2,))
         self._decode = jax.jit(_decode_n, donate_argnums=(2,),
                                static_argnums=(8,) if paged else (5,))
+
+        self._verify = None
+        if self.speculative:
+            def _verify_fwd(p, toks, cache, table, pos, lengths, cow_src,
+                            cow_dst):
+                self._traces["verify"] += 1
+                # Same pre-scan COW as the decode dispatch: a bootstrap
+                # slot's first append may land inside a shared page.
+                if prefix_bootstrap:
+                    def cow(path, leaf):
+                        if cache_leaf_kind(cache_leaf_name(path)) != "kv":
+                            return leaf
+                        return leaf.at[:, cow_dst].set(leaf[:, cow_src])
+
+                    cache = jax.tree_util.tree_map_with_path(cow, cache)
+                greedy, _lg, cache = verify_step(p, cfg, toks, cache, pos,
+                                                 lengths, page_table=table)
+                return greedy, cache
+
+            # The window width W is baked in from ``toks.shape[1]``, so
+            # each ladder rung is one compiled program (<=3 total) —
+            # counted by the ``verify`` trace probe.
+            self._verify = jax.jit(_verify_fwd, donate_argnums=(2,))
 
         if self.chunked:
             assert self.kv is not None
@@ -391,6 +488,17 @@ class ServingEngine:
             "prefix_evictions": 0,
             "prefix_cached_pages": 0,
             "decode_block_last": self.decode_block,
+            "speculative": int(self.speculative),
+            "draft_len": self.draft_len if self.speculative else 0,
+            "draft_tokens": 0,
+            "accepted_tokens": 0,
+            "accept_rate": 0.0,
+            "spec_tokens": 0,
+            "verify_dispatches": 0,
+            "dispatches_per_token": 0.0,
+            "rollbacks": 0,
+            "rollback_pages": 0,
+            "verify_traces": 0,
         }
 
     def _mesh_ctx(self):
@@ -432,7 +540,10 @@ class ServingEngine:
                     progressed = True
             if any(active[s] is not None and decoding[s]
                    for s in range(self.slots)):
-                self._decode_block(active, decoding, pos, tok)
+                if self.speculative:
+                    self._speculative_block(active, decoding, pos, tok)
+                else:
+                    self._decode_block(active, decoding, pos, tok)
                 progressed = True
             if not progressed:                      # defensive: no work
                 break
@@ -451,6 +562,14 @@ class ServingEngine:
             self.metrics["kv_bytes_cached"] = self.kv.bytes_cached
         self.metrics["prefill_traces"] = self._traces["prefill"]
         self.metrics["decode_traces"] = self._traces["decode"]
+        self.metrics["verify_traces"] = self._traces["verify"]
+        if self.speculative:
+            self.metrics["accept_rate"] = (
+                self.metrics["accepted_tokens"]
+                / max(self.metrics["draft_tokens"], 1))
+            self.metrics["dispatches_per_token"] = (
+                self.metrics["verify_dispatches"]
+                / max(self.metrics["spec_tokens"], 1))
         return reqs
 
     # ------------------------------------------------------- scheduling
@@ -819,3 +938,150 @@ class ServingEngine:
         self.metrics["scan_ticks"] += block
         self.decode_eff = (0.5 * self.decode_eff
                            + 0.5 * useful / block)
+
+    # ------------------------------------------------ speculative decode
+    def _draft(self, r: Request, limit: int) -> List[int]:
+        """Host-side draft for one slot: up to ``min(draft_len, limit)``
+        guesses for the tokens AFTER the pending one.  Sources, in
+        order: the prefix-cache radix tree (what followed this history
+        in earlier traffic — ``PrefixCache.suggest`` is read-only, so
+        drafting never perturbs eviction order), then n-gram
+        prompt-lookup (the history's trailing trigram/bigram matched
+        backwards over the history itself).  Drafts are guesses — a
+        wrong one costs its verify row, never correctness."""
+        k = min(self.draft_len, limit)
+        if k <= 0:
+            return []
+        hist = np.asarray(r.out_tokens, np.int32)
+        if r.prompt.ndim == 1:                      # token prompts only
+            hist = np.concatenate([r.prompt.astype(np.int32), hist])
+        out: List[int] = []
+        if self.prefix is not None:
+            out = [int(t) for t in self.prefix.suggest(hist, k)]
+        while len(out) < k:
+            ext = _ngram_continuation(
+                np.concatenate([hist, np.asarray(out, np.int32)]),
+                k - len(out))
+            if not ext:
+                break
+            out.extend(ext)
+        return out[:k]
+
+    def _speculative_block(self, active, decoding, pos, tok) -> None:
+        """One draft-then-verify dispatch across all slots (DESIGN.md
+        §11).  Stack ``[pending, d1..dk]`` per slot into a ``[slots, W]``
+        window, score every position with ONE verify dispatch, accept
+        the longest prefix of drafts matching the model's own greedy
+        argmax, then roll the slot's KV extent back over the rejected
+        tail.  W snaps up to the <=3-rung ladder; slots without drafts
+        — and idle or parked mid-prefill slots — ride along on padding
+        (their window writes route to the NULL page / their outputs are
+        discarded, exactly like padded decode slots)."""
+        assert self.kv is not None and self._verify is not None
+        runnable = [s for s in range(self.slots)
+                    if active[s] is not None and decoding[s]]
+        drafts: Dict[int, List[int]] = {}
+        caps: Dict[int, int] = {}
+        need = 1
+        for s in runnable:
+            r = active[s]
+            # A slot may deliver at most ``cap`` tokens this dispatch:
+            # its remaining budget, clamped to max_len (positions past
+            # max_len write to the NULL page and verify garbage).
+            caps[s] = min(r.max_new_tokens - len(r.out_tokens),
+                          self.max_len - int(pos[s]))
+            drafts[s] = self._draft(r, caps[s] - 1)
+            need = max(need, len(drafts[s]) + 1)
+        w = next(x for x in self._w_ladder if x >= need)
+        # COW resolution and page provisioning: same contract as the
+        # decode block (allocator failure fails THIS request only).
+        cow_src = np.full(self.slots, NULL_PAGE, np.int32)
+        cow_dst = np.full(self.slots, NULL_PAGE, np.int32)
+        for s in list(runnable):
+            r = active[s]
+            try:
+                if self._cow[s] is not None:
+                    cow_src[s], cow_dst[s] = self.kv.cow_page(
+                        s, self._cow[s])
+                    self._cow[s] = None
+                    self.metrics["cow_copies"] += 1
+                    self.prefix.page_released(int(cow_src[s]))
+                self.kv.ensure(s, min(int(pos[s]) + w, self.max_len))
+            except RuntimeError as e:
+                r.failed = True
+                r.error = str(e)
+                self.metrics["rejected"] += 1
+                self._retire(s, r, active, decoding, pos, tok)
+                cow_src[s] = cow_dst[s] = NULL_PAGE
+        runnable = [s for s in runnable
+                    if active[s] is not None and decoding[s]]
+        if not runnable:
+            return
+        toks = np.zeros((self.slots, w), np.int32)
+        dpos = np.full(self.slots, self.kv.extent, np.int32)
+        dlen = np.zeros(self.slots, np.int32)
+        for s in runnable:
+            toks[s, 0] = tok[s, 0]
+            d = drafts[s]
+            toks[s, 1:1 + len(d)] = d
+            dpos[s] = pos[s]
+            dlen[s] = pos[s]
+        with self._mesh_ctx():
+            greedy, cache = self._verify(
+                self.params, jnp.asarray(toks), self._slot_cache,
+                self.kv.page_table, jnp.asarray(dpos), jnp.asarray(dlen),
+                jnp.asarray(cow_src), jnp.asarray(cow_dst))
+        self._slot_cache = cache
+        g = np.asarray(greedy)                       # [slots, W]
+        useful = 0
+        filled = 0
+        for s in runnable:
+            r = active[s]
+            d = drafts[s]
+            cap = caps[s]
+            # Row i's output is the model's next token after consuming
+            # toks[s, :i+1]; draft i is accepted while it EQUALS the
+            # previous row's output — i.e. while the window tracks what
+            # plain greedy decode would have produced anyway.  (A pad
+            # token that happens to match is accepted too: it IS the
+            # correct greedy token.)
+            a = 0
+            while (a < w - 1 and a + 1 < cap
+                   and int(toks[s, a + 1]) == int(g[s, a])):
+                a += 1
+            delivered = a + 1                        # y0..ya
+            r.out_tokens.extend(int(g[s, i]) for i in range(delivered))
+            if r.first_token_at <= 0.0:
+                r.first_token_at = time.perf_counter()
+            self.metrics["generated"] += delivered
+            self.metrics["spec_tokens"] += delivered
+            self.metrics["draft_tokens"] += len(d)
+            self.metrics["accepted_tokens"] += min(a, len(d))
+            useful = max(useful, delivered)
+            filled += delivered
+            pos[s] = int(pos[s]) + delivered
+            tok[s, 0] = int(g[s, a])
+            # The verify window appended K/V at pos..pos+W-1; positions
+            # past the new write head are stale.  Wholly-stale pages are
+            # returned now (freshly allocated and exclusively owned by
+            # construction — rollback_extent asserts it); the stale tail
+            # INSIDE the kept last page is masked by length and
+            # overwritten as the slot advances.
+            dropped = self.kv.rollback_extent(s, int(pos[s]))
+            if dropped:
+                self.metrics["rollbacks"] += 1
+                self.metrics["rollback_pages"] += dropped
+            if self._debug_check_pages:
+                self.kv.assert_page_accounting()
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or pos[s] >= self.max_len):
+                self._retire(s, r, active, decoding, pos, tok)
+        self.metrics["dispatches"] += 1
+        self.metrics["verify_dispatches"] += 1
+        self.metrics["ticks"] += useful
+        self.metrics["scan_ticks"] += w
+        # The decode-pressure EMA counts ACCEPTED tokens per verify row,
+        # not scan ticks — a rejected draft row is wasted capacity
+        # exactly like a wasted scan tick.
+        self.decode_eff = (0.5 * self.decode_eff
+                           + 0.5 * filled / (w * len(runnable)))

@@ -137,6 +137,45 @@ def paged_append(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
     return pool.at[phys, posc % page_size].set(tok.astype(pool.dtype))
 
 
+def paged_append_window(pool: jax.Array, page_table: jax.Array,
+                        pos: jax.Array, new: jax.Array, *, layout: str,
+                        cow_src: Optional[jax.Array] = None,
+                        cow_dst: Optional[jax.Array] = None) -> jax.Array:
+    """Scatter a W-token verify window per slot into its pages.
+
+    The speculative-decoding sibling of ``paged_append``: ``new`` carries
+    ``W = k + 1`` rows per slot ([B, W, H, hd] "bshd" / [B, H, W, hd]
+    "bhsd") written at absolute positions ``pos[b] .. pos[b] + W - 1``.
+    The same NULL routing applies per row — any row at/past the table
+    extent (or a negative position: an inactive slot parked at ``pos=-1``)
+    lands in the sacrificial page — so a verify window that overruns a
+    slot's capacity degrades into sink writes instead of corrupting live
+    K/V.  A window may straddle a page boundary; each row resolves its own
+    physical page, so no alignment between ``pos`` and the page grid is
+    required.  COW pairs behave exactly as in ``paged_append`` (the
+    engine's pre-scan already swapped the table entry to ``cow_dst``).
+
+    The rows past the accepted prefix are STALE after acceptance: the
+    engine rolls the slot's extent back (``rollback_extent``) and later
+    writes overwrite them; reads in between are masked by ``lengths``.
+    """
+    page_size = pool.shape[1]
+    b = page_table.shape[0]
+    if cow_src is not None:
+        pool = cow_copy_pool(pool, cow_src, cow_dst)
+    win = to_page_major(new, layout)                       # [B, W, H, hd]
+    w = win.shape[1]
+    extent = page_table.shape[1] * page_size
+    p = pos[:, None] + jnp.arange(w)[None, :]              # [B, W]
+    in_range = jnp.logical_and(p >= 0, p < extent)
+    pc = jnp.clip(p, 0, extent - 1)
+    phys = jnp.where(
+        in_range,
+        page_table[jnp.arange(b)[:, None], pc // page_size],
+        NULL_PAGE)                                         # [B, W]
+    return pool.at[phys, pc % page_size].set(win.astype(pool.dtype))
+
+
 def live_page_table(page_table: jax.Array, lengths, page_size: int
                     ) -> jax.Array:
     """Re-route table entries wholly past the live prefix to the NULL page.
@@ -539,6 +578,41 @@ class PagedKVCache:
         self._table[slot, logical] = dst
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         return src, dst
+
+    def rollback_extent(self, slot: int, length: int) -> int:
+        """Truncate a slot's extent to ``length`` tokens after a rejected
+        speculative draft, releasing the freshly-appended tail pages
+        exactly once.  Returns the number of pages released.
+
+        Only pages WHOLLY past ``length`` are dropped; a partial last page
+        is kept (its stale tail rows are masked by the slot's length and
+        overwritten by later appends).  The engine never rolls back below
+        the prompt — draft rows are appended strictly after the prefill
+        extent — so every truncated page was allocated exclusively for
+        draft K/V this pass.  That invariant is ASSERTED here rather than
+        assumed: a truncated page must be exclusively owned (``refs == 1``)
+        and not tree-owned, i.e. the prefix cache can never lose a shared
+        or cached page to a rollback, and a rolled-back partial page can
+        never have been adopted into the radix tree (``PrefixCache.insert``
+        only indexes full prompt pages, which rollback never touches).
+        """
+        keep = cdiv(max(length, 1), self.page_size)
+        owned = self._owned[slot]
+        dropped = 0
+        while len(owned) > keep:
+            page = owned[-1]
+            # Check BEFORE popping: a refused rollback must leave the
+            # allocator untouched, not half-truncated.
+            assert self._refs[page] == 1 and page not in self._tree, \
+                (f"rollback of slot {slot} would release page {page} "
+                 f"(refs={int(self._refs[page])}, "
+                 f"tree={page in self._tree}) — draft pages must be "
+                 f"exclusive and never tree-adopted")
+            owned.pop()
+            self._table[slot, len(owned)] = NULL_PAGE
+            self._deref(page)
+            dropped += 1
+        return dropped
 
     # ------------------------------------------------- tree page custody
     def mark_tree(self, page: int) -> None:

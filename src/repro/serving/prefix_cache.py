@@ -153,6 +153,56 @@ class PrefixCache:
         Pure lookup: no refcounts move."""
         return len(self._walk(prompt))
 
+    # ---------------------------------------------------------- drafting
+    def suggest(self, tokens: np.ndarray, k: int) -> List[int]:
+        """Draft lookup for speculative decoding: up to ``k`` token ids a
+        cached run continued with after ``tokens``.  Pure — no refcounts
+        move, no pages are claimed, and the nodes are not re-stamped
+        (drafting must not perturb LRU eviction order: a wrong guess
+        costs one rejected row, it shouldn't also pin the page).
+
+        The radix tree doubles as a draft table: its keys ARE token
+        history.  The walk matches ``tokens``'s full page chunks, then
+        matches the partial remainder against a child key's prefix and
+        emits that key's continuation; from there it keeps descending,
+        preferring the most-recently-stamped child at each fork (the
+        hottest cached continuation).  Returns [] when the history
+        diverges from everything cached — the engine falls back to
+        n-gram prompt lookup.
+        """
+        if k <= 0:
+            return []
+        ps = self.kv.page_size
+        n = int(tokens.shape[0])
+        node = self.root
+        for i in range(n // ps):
+            child = node.children.get(self._key(tokens, i))
+            if child is None or child.dead:
+                return []
+            node = child
+        out: List[int] = []
+        r = n % ps
+        if r:
+            tail = tuple(int(t) for t in tokens[n - r:])
+            nxt = None
+            for key, child in node.children.items():
+                if child.dead or key[:r] != tail:
+                    continue
+                if nxt is None or child.stamp > nxt.stamp:
+                    nxt = child
+            if nxt is None:
+                return []
+            out.extend(nxt.key[r:])
+            node = nxt
+        while len(out) < k and node.children:
+            nxt = max((c for c in node.children.values() if not c.dead),
+                      key=lambda c: c.stamp, default=None)
+            if nxt is None:
+                break
+            out.extend(nxt.key)
+            node = nxt
+        return out[:k]
+
     # ------------------------------------------------------------ claim
     def claim(self, slot: int, prompt: np.ndarray) -> PrefixHit:
         """Admission-time prefix walk: claim matching pages into the
