@@ -36,6 +36,13 @@ Measures the three model entry points under both execution paths:
     a greedy-token equality check.  Needs >= 8 (forced) devices — run
     under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
     ``sharded`` job does); skipped gracefully otherwise.
+  * quantized         — quantized serving (DESIGN.md §14): the same
+    engine under ``quant=kv_int8 / kv_fp8 / w8_kv8`` vs ``none`` — KV
+    bytes per token, pages per slot, effective KV itemsize, plus the
+    accuracy gate's max-logit-error and greedy-vs-f32 equality per mode.
+
+``interpret_mode`` is reported ONCE at the report's top level (every
+fused number in the file shares the same backend).
 
 Run on CPU the Pallas kernels execute in *interpret mode* (the kernel body
 runs in Python per grid step), so fused numbers here validate the dispatch
@@ -66,6 +73,7 @@ from repro.kernels.common import interpret_default
 from repro.models import (forward_train, init_params, prefill, resolve_plan,
                           supports_chunked_prefill, supports_speculative)
 from repro.serving import ServingEngine
+from repro.serving.accuracy import run_accuracy, supports_quantized_serving
 
 ARCHS = ("gpt2", "llama3-8b")        # layernorm/GELU-MLP and RMSNorm/SwiGLU-GQA
 
@@ -124,7 +132,56 @@ def bench_sharded_decode(base, *, batch: int, max_len: int,
         if mesh is not None:
             out[name]["plan_sharding"] = eng.plan.summary()["sharding"]
     out["tokens_equal"] = tokens["single"] == tokens["sharded"]
-    out["interpret_mode"] = interpret_default()
+    return out
+
+
+def bench_quantized(base, params, *, max_len: int, decode_block: int,
+                    new_tokens: int) -> Dict[str, Any]:
+    """Quantized serving (DESIGN.md §14): kv_int8/kv_fp8/w8_kv8 vs none.
+
+    Same engine, same prompts, one run per mode: KV bytes per token and
+    pages per slot (the capacity numbers halving the page itemsize
+    buys), the effective KV itemsize (codes + f32 scale rows), and —
+    from the teacher-forced accuracy harness — max logit error vs f32
+    and greedy-token equality per mode.
+    """
+    if not supports_quantized_serving(base):
+        return {"skipped": f"{base.name}: no paged attention KV "
+                           "(quantized pages ride on it)"}
+    modes = ("kv_int8", "kv_fp8", "w8_kv8")
+    acc = run_accuracy(base, modes=modes, steps=6)
+    nprng = np.random.default_rng(33)
+    prompts = [nprng.integers(1, base.vocab_size, n, dtype=np.int32)
+               for n in (max_len // 2, max_len // 4)]
+    out: Dict[str, Any] = {}
+    for quant in ("none",) + modes:
+        eng = ServingEngine(base, params, batch_slots=len(prompts),
+                            max_len=max_len, decode_block=decode_block,
+                            quant=quant, prefix_cache=False)
+        eng.generate([p.copy() for p in prompts],
+                     max_new_tokens=2)               # absorb compiles
+        t0 = time.perf_counter()
+        reqs = eng.generate([p.copy() for p in prompts],
+                            max_new_tokens=new_tokens)
+        wall = time.perf_counter() - t0
+        generated = sum(len(r.out_tokens) for r in reqs)
+        cached = sum(len(p) for p in prompts) + generated
+        peak = eng.metrics["kv_bytes_peak"]
+        row: Dict[str, Any] = {
+            "decode_tokens_per_s": generated / wall,
+            "kv_bytes_peak": int(peak),
+            "kv_bytes_per_token": peak / cached,
+            "pages_per_slot": (peak / eng.kv.page_bytes) / len(prompts),
+            "kv_itemsize_effective":
+                eng.metrics["kv_itemsize_effective"],
+        }
+        if quant != "none":
+            row["max_logit_err"] = acc[quant]["max_logit_err"]
+            row["tokens_equal_f32"] = bool(acc[quant]["tokens_equal"])
+        out[quant] = row
+    out["kv_int8_over_none_bytes"] = (
+        out["kv_int8"]["kv_bytes_peak"]
+        / max(out["none"]["kv_bytes_peak"], 1))
     return out
 
 
@@ -187,6 +244,7 @@ def bench_prefix_serving(base, params, *, max_len: int,
         "kv_bytes_saved": int(eng.metrics["prefix_hit_pages"]
                               * eng.kv.page_bytes),
         "kv_bytes_cached": int(eng.metrics["kv_bytes_cached"]),
+        "kv_itemsize_effective": eng.metrics["kv_itemsize_effective"],
     }
     boot = ServingEngine(base, params, batch_slots=2, max_len=max_len,
                          decode_block=decode_block, page_size=ps,
@@ -278,7 +336,6 @@ def bench_speculative(base, params, *, max_len: int, decode_block: int,
     out["plain_over_speculative_evals"] = (
         out["plain"]["evals_per_token"]
         / max(out["speculative"]["evals_per_token"], 1e-9))
-    out["interpret_mode"] = interpret_default()
     if interpret_default():
         out["note"] = ("CPU interpret mode: tokens/s measures dispatch "
                        "plumbing; the evals-per-token ratio is the "
@@ -347,6 +404,8 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
                 "generated": engine.metrics["generated"] - g0,
                 "kv_bytes_reserved": engine.metrics["kv_bytes_reserved"],
                 "kv_bytes_peak": engine.metrics["kv_bytes_peak"],
+                "kv_itemsize_effective":
+                    engine.metrics["kv_itemsize_effective"],
                 "page_size": engine.metrics["page_size"],
             }
         decode["paged_over_contiguous_bytes"] = (
@@ -403,7 +462,6 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
             "decode": decode,
         }
         if mode == "fused":
-            result[mode]["interpret_mode"] = interpret_default()
             if interpret_default():
                 result[mode]["note"] = (
                     "Pallas kernels ran in interpret mode (no TPU): "
@@ -420,6 +478,9 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     result["sharded_decode"] = bench_sharded_decode(
         base, batch=batch, max_len=max_len, decode_block=decode_block,
         new_tokens=new_tokens)
+    result["quantized"] = bench_quantized(
+        base, params, max_len=max_len, decode_block=decode_block,
+        new_tokens=new_tokens)
     return result
 
 
@@ -433,7 +494,9 @@ def main(argv=None) -> int:
 
     report: Dict[str, Any] = {
         "backend": jax.default_backend(),
-        "pallas_interpret": interpret_default(),
+        # ONE top-level flag: every fused number below shares the same
+        # backend, so per-section copies only invited drift.
+        "interpret_mode": interpret_default(),
         "quick": args.quick,
         "configs": [],
     }
@@ -486,6 +549,17 @@ def main(argv=None) -> int:
                 f"x{sd['sharded']['kv_shards']} shards "
                 f"({sd['sharded']['kv_bytes_peak_per_shard']} B/shard, "
                 f"tokens_equal={sd['tokens_equal']})")
+        qz = r["quantized"]
+        if "skipped" in qz:
+            quant_note = "quantized skipped"
+        else:
+            q8 = qz["kv_int8"]
+            quant_note = (
+                f"kv_int8 {q8['kv_bytes_per_token']:.0f} B/tok "
+                f"(x{qz['kv_int8_over_none_bytes']:.2f} bytes, itemsize "
+                f"{q8['kv_itemsize_effective']:.2f}B, max|dlogit| "
+                f"{q8['max_logit_err']:.3g}, "
+                f"tokens_equal={q8['tokens_equal_f32']})")
         print(f"{r['arch']}: train {e['train_s']*1e3:.1f}ms eager / "
               f"{f['train_s']*1e3:.1f}ms fused | decode "
               f"{e['decode_tokens_per_s']:.1f} vs "
@@ -493,7 +567,8 @@ def main(argv=None) -> int:
               f"kv peak {dc['paged']['kv_bytes_peak']} paged / "
               f"{dc['contiguous']['kv_bytes_peak']} contiguous bytes | "
               f"{burst_note} | {prefix_note} | {spec_note} | "
-              f"{shard_note} | loss diff {r['loss_abs_diff']:.2e}",
+              f"{shard_note} | {quant_note} | "
+              f"loss diff {r['loss_abs_diff']:.2e}",
               flush=True)
 
     with open(args.out, "w") as fh:

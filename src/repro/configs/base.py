@@ -73,9 +73,37 @@ class ModelConfig:
     # Modality frontend stub (VLM patch / audio frame embeddings).
     frontend: str = "none"            # none | patch | frame
     dtype: str = "bfloat16"
+    # QuantMode (DESIGN.md §14): serving-side quantization, composable
+    # KV-side x weight-side.  "kv_int8"/"kv_fp8" store the paged K/V pools
+    # as int8 / fp8-e4m3 with per-page per-kv-head f32 scales; "w8" runs
+    # the plan's rmsnorm_matmul / streamed_ffn stages weight-only int8
+    # with per-output-channel scales; "w8_kv8" composes both.
+    quant: str = "none"               # none | kv_int8 | kv_fp8 | w8 | w8_kv8
     max_seq_len: int = 524_288
 
     # ------------------------------------------------------------- derived
+    QUANT_MODES = ("none", "kv_int8", "kv_fp8", "w8", "w8_kv8")
+
+    def __post_init__(self):
+        if self.quant not in self.QUANT_MODES:
+            raise ValueError(
+                f"unknown quant mode {self.quant!r}: one of "
+                f"{self.QUANT_MODES}")
+
+    @property
+    def kv_quant(self) -> Optional[str]:
+        """KV-pool storage format ("int8" | "fp8" | None)."""
+        if self.quant in ("kv_int8", "w8_kv8"):
+            return "int8"
+        if self.quant == "kv_fp8":
+            return "fp8"
+        return None
+
+    @property
+    def weight_quant(self) -> bool:
+        """Weight-only int8 on the plan's matmul stages."""
+        return self.quant in ("w8", "w8_kv8")
+
     @property
     def head_dim_(self) -> int:
         return self.head_dim or (self.d_model // max(1, self.num_heads))

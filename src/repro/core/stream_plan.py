@@ -126,6 +126,7 @@ class StreamPlan:
     default_tile_size: int
     overall_unroll_size: int
     layers: Tuple[Tuple[str, LayerPlan], ...]   # kind -> plan
+    quant: str = "none"          # the QuantMode the plan was built under
     lm_head: KernelChoice = EAGER
     modeled_latency_s: float = 0.0
     fusion_groups: int = 0
@@ -178,6 +179,7 @@ class StreamPlan:
     def summary(self) -> Dict[str, object]:
         return {
             "arch": self.arch,
+            "quant": self.quant,
             "tokens": self.tokens,
             "kv_len": self.kv_len,
             "tile": self.default_tile_size,
@@ -276,10 +278,17 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
             norm_fused = (cfg.norm == "rmsnorm"
                           and _same_group(compiled, ln, f"{ab}.q_proj"))
             impl = "rmsnorm_matmul" if norm_fused else "block_matmul"
-            qkv = KernelChoice(impl, (
+            blocks: Blocks = (
                 ("block_t", _tile(g, f"{ab}.q_proj", "t")),
                 ("block_n", _tile(g, f"{ab}.q_proj", "dq")),
-            ))
+            )
+            # Weight-only int8 (DESIGN.md §14): the plan flags the stage
+            # and the wrapper quantizes + dispatches the w8 kernel twin.
+            # Only rmsnorm_matmul has one; block_matmul (layernorm archs)
+            # stays full-precision — a documented follow-on.
+            if cfg.weight_quant and impl == "rmsnorm_matmul":
+                blocks += (("w8", 1),)
+            qkv = KernelChoice(impl, blocks)
         if fused_at(f"{ab}.attention"):
             attention = KernelChoice("flash_attention", (
                 ("block_q", _tile(g, f"{ab}.attention", "t")),
@@ -306,11 +315,14 @@ def _layer_plan(cfg: ModelConfig, compiled: CompiledDataflow, kind: str,
             norm_fused = (cfg.norm == "rmsnorm" and _same_group(
                 compiled, f"{ab}.ln2", f"{mb}.up_proj"))
             impl = "streamed_ffn" if cfg.gated_ffn else "streamed_mlp"
-            ffn = KernelChoice(impl, (
+            fblocks: Blocks = (
                 ("block_t", _tile(g, f"{mb}.up_proj", "t")),
                 ("block_f", _tile(g, f"{mb}.up_proj", "f")),
                 ("fuse_norm", int(norm_fused)),
-            ))
+            )
+            if cfg.weight_quant:
+                fblocks += (("w8", 1),)
+            ffn = KernelChoice(impl, fblocks)
 
     if kind in ("mamba", "mamba+shared_attn"):
         if fused_at(f"{base}.ssm_scan"):
@@ -535,7 +547,7 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
         arch=cfg.name, tokens=tokens, kv_len=kv_len or tokens,
         platform=platform.name,
         default_tile_size=tile or LANE, overall_unroll_size=unroll or 64,
-        layers=tuple(layers), lm_head=lm_head,
+        layers=tuple(layers), quant=cfg.quant, lm_head=lm_head,
         modeled_latency_s=latency, fusion_groups=groups,
         implementations=impls, mesh_axes=mesh_axes)
 

@@ -144,6 +144,68 @@ def _flash_kernel_offset(meta_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0] = (acc_ref[0] / l).astype(o_ref.dtype)
 
 
+def _flash_kernel_offset_q(meta_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                           o_ref, m_ref, l_ref, acc_ref, *, n_kv: int,
+                           block_q: int, block_kv: int, scale: float,
+                           causal: bool, window: int):
+    """Quantized twin of ``_flash_kernel_offset`` (DESIGN.md §14): K/V
+    blocks are int8/fp8 codes dequantized in-register against per-POSITION
+    f32 scales (``[Hkv_, Skv]`` operands blocked alongside K/V — each KV
+    position inherits its page's per-(page, head) scale, expanded by the
+    gather wrapper).  Math stays f32; masking/skips are unchanged."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    q_off = meta_ref[0]
+    kv_len = meta_ref[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q + q_off          # absolute query positions
+    k_start = ki * block_kv
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window:
+        run = jnp.logical_and(run, k_start + block_kv > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]
+        k = k_ref[0].astype(jnp.float32) * ks_ref[0][:, None]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [bq, bkv]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32) * vs_ref[0][:, None]
+        acc_ref[0] = acc_ref[0] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
 def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        causal: bool = True, window: int = 0,
                        kv_len=None,
@@ -151,6 +213,8 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        kv_group: int = 1,
                        block_q: int = 512, block_kv: int = 512,
                        q_offset=None,
+                       k_scale: Optional[jax.Array] = None,
+                       v_scale: Optional[jax.Array] = None,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Flattened-head core: q [Hq_, Sq, D], k/v [Hkv_, Skv, D] where
     ``Hq_ == Hkv_ * kv_group`` -> [Hq_, Sq, D].
@@ -166,6 +230,10 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
     int or a traced scalar), it and ``kv_len`` ride in as scalar-prefetch
     operands so ONE compiled program serves every chunk of every prompt;
     ``kv_len`` may then be dynamic too (the valid fill of the cache).
+
+    Quantized K/V (offset path only): pass ``k_scale``/``v_scale``
+    [Hkv_, Skv] f32 per-position scales — k/v are then int8/fp8 codes,
+    dequantized block-by-block in-register.
     """
     h, sq, d = q.shape
     _, skv, _ = k.shape
@@ -176,6 +244,11 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
     grid = (h, sq // bq, skv // bkv)
     interpret = interpret_default() if interpret is None else interpret
     g = kv_group
+    quant = k_scale is not None
+    if quant and q_offset is None:
+        raise NotImplementedError(
+            "quantized flash attention only supports the offset "
+            "(chunked-prefill) path")
 
     if q_offset is not None:
         meta = jnp.stack([jnp.asarray(q_offset, jnp.int32).reshape(()),
@@ -192,14 +265,25 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
             last_live = jnp.maximum(meta[1] - 1, 0) // bkv
             return (b // g, jnp.minimum(j, last_live), 0)
 
+        def sc_block(b, i, j, meta):
+            last_live = jnp.maximum(meta[1] - 1, 0) // bkv
+            return (b // g, jnp.minimum(j, last_live))
+
+        in_specs = [
+            pl.BlockSpec((1, bq, d), lambda b, i, j, meta: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), kv_block),
+            pl.BlockSpec((1, bkv, d), kv_block),
+        ]
+        operands = (q, k, v)
+        if quant:
+            in_specs += [pl.BlockSpec((1, bkv), sc_block),
+                         pl.BlockSpec((1, bkv), sc_block)]
+            operands += (k_scale.astype(jnp.float32),
+                         v_scale.astype(jnp.float32))
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,           # [q_offset, kv_len]
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, bq, d), lambda b, i, j, meta: (b, i, 0)),
-                pl.BlockSpec((1, bkv, d), kv_block),
-                pl.BlockSpec((1, bkv, d), kv_block),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, bq, d),
                                    lambda b, i, j, meta: (b, i, 0)),
             scratch_shapes=[
@@ -208,14 +292,15 @@ def flash_attention_2d(q: jax.Array, k: jax.Array, v: jax.Array, *,
                 pltpu.VMEM((1, bq, d), jnp.float32),
             ],
         )
+        kernel = _flash_kernel_offset_q if quant else _flash_kernel_offset
         return pl.pallas_call(
             functools.partial(
-                _flash_kernel_offset, n_kv=grid[2], block_q=bq,
+                kernel, n_kv=grid[2], block_q=bq,
                 block_kv=bkv, scale=scale, causal=causal, window=window),
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
             interpret=interpret,
-        )(meta, q, k, v)
+        )(meta, *operands)
 
     return pl.pallas_call(
         functools.partial(

@@ -39,6 +39,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     kv_len=None,
                     block_q: int = 512, block_kv: int = 512,
                     q_offset=None,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None,
                     interpret: Optional[bool] = None) -> jax.Array:
     """Model-layout flash attention with GQA.
 
@@ -49,6 +51,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``q_offset`` (chunked prefill) shifts query positions by a dynamic
     scalar so a chunk's queries attend the already-cached prefix; with it
     set, ``kv_len`` may be a traced scalar (the cache's valid fill).
+
+    Quantized K/V (offset path): ``k_scale``/``v_scale`` [B, Skv, Hkv]
+    per-position f32 scales — k/v are then int8/fp8 codes gathered from
+    quantized pools, dequantized in-register by the kernel.
     """
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
@@ -66,10 +72,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         .reshape(b * hkv * g, sq, dp)
     kk = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dp)
     vk = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dp)
+    if k_scale is not None:
+        k_scale = k_scale.transpose(0, 2, 1).reshape(b * hkv, skv)
+        v_scale = v_scale.transpose(0, 2, 1).reshape(b * hkv, skv)
     out = flash_attention_2d(qk, kk, vk, causal=causal, window=window,
                              kv_len=kv_len, scale=scale, kv_group=g,
                              block_q=block_q, block_kv=block_kv,
-                             q_offset=q_offset, interpret=interpret)
+                             q_offset=q_offset, k_scale=k_scale,
+                             v_scale=v_scale, interpret=interpret)
     out = out.reshape(b, hkv, g, sq, dp).transpose(0, 3, 1, 2, 4) \
         .reshape(b, sq, hq, dp)
     return out[..., :d]

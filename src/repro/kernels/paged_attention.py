@@ -25,6 +25,14 @@ unallocated table entries point at the NULL page so the indirection is
 always in bounds.  Per-slot length (and optional sliding-window) masking
 is applied per element inside the page.  Interpret-mode fallback on CPU,
 same as every kernel in this package.
+
+Quantized pools (DESIGN.md §14): when ``k_scale``/``v_scale`` pools are
+passed, the K/V pools hold int8 / fp8-e4m3 codes and the kernels
+dequantize each page IN-REGISTER inside the online-softmax loop —
+``k = codes.astype(f32) * scale[page, head]``.  The per-(page, kv-head)
+f32 scale pools ride in as scalar-prefetch operands next to the page
+table, fetched through the same ``tbl[b, j]`` indirection, so the page
+stream's HBM traffic drops to the code itemsize while the math stays f32.
 """
 
 from __future__ import annotations
@@ -84,6 +92,62 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
         v = v_ref[0, :, 0, :].astype(jnp.float32)          # [ps, D]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel_q(len_ref, tbl_ref, ks_ref, vs_ref, q_ref, k_ref,
+                           v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                           page_size: int, n_pages: int, scale: float,
+                           window: int):
+    """Quantized decode body: identical online softmax, with each K/V
+    page dequantized in-register at its per-(page, head) scale.  The
+    scale pools are scalar-prefetch operands (SMEM), indexed through the
+    same page-table indirection as the page fetch itself."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    page_start = j * page_size
+    run = page_start < length
+    if window:
+        run = jnp.logical_and(run, page_start + page_size > length - window)
+
+    @pl.when(run)
+    def _body():
+        phys = tbl_ref[b, j]
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[phys, h]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [G, ps]
+        g = s.shape[0]
+        kv_pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1)
+        mask = kv_pos < length
+        if window:
+            mask = jnp.logical_and(mask, kv_pos >= length - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[phys, h]
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -158,10 +222,70 @@ def _paged_verify_kernel(off_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_verify_kernel_q(off_ref, tbl_ref, ks_ref, vs_ref, q_ref, k_ref,
+                           v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                           page_size: int, n_pages: int, scale: float,
+                           window: int, win: int, g: int):
+    """Quantized verify body: per-row causal masking as the f32 kernel,
+    pages dequantized in-register (see ``_paged_decode_kernel_q``)."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_off = off_ref[b]
+    page_start = j * page_size
+    run = page_start < q_off + win
+    if window:
+        run = jnp.logical_and(
+            run, page_start + page_size > q_off + 1 - window)
+
+    @pl.when(run)
+    def _body():
+        phys = tbl_ref[b, j]
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [win*G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[phys, h]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [win*G, ps]
+        rows = win * g
+        q_idx = jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 0) // g
+        kv_pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 1)
+        qlen = q_off + q_idx + 1
+        mask = kv_pos < qlen
+        if window:
+            mask = jnp.logical_and(mask, kv_pos >= qlen - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[phys, h]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
 def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, page_table: jax.Array,
                            q_off: jax.Array, *, window: int = 0,
                            scale: Optional[float] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            interpret: Optional[bool] = None) -> jax.Array:
     """W-token speculative-verify attention against paged K/V pools.
 
@@ -180,11 +304,15 @@ def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
     single-token kernel would produce at that row's length — pages a row
     cannot see fold in as exact no-ops — so accepted tokens bit-match
     non-speculative decode.
+
+    Quantized pools: pass ``k_scale``/``v_scale`` [P, Hkv] f32 (both or
+    neither) — the pools are then int8/fp8 codes, dequantized in-register.
     """
     b, w, hq, d = q.shape
     _, page_size, hkv, _ = k_pool.shape
     n_pages = page_table.shape[1]
     g = hq // hkv
+    quant = k_scale is not None
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     interpret = interpret_default() if interpret is None else interpret
     dp = d if interpret else round_up(d, LANE)
@@ -198,36 +326,42 @@ def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
     qk = q.reshape(b, w, hkv, g, dp).transpose(0, 2, 1, 3, 4) \
           .reshape(b, hkv, w * g, dp)
 
+    n_scalars = 4 if quant else 2    # q_off, page_table (, k/v scales)
+
+    def qmap(bi, hi, ji, *scalars):
+        return (bi, hi, 0, 0)
+
+    def kvmap(bi, hi, ji, off, tbl, *scalars):
+        return (tbl[bi, ji], 0, hi, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,           # q_off, page_table
+        num_scalar_prefetch=n_scalars,
         grid=(b, hkv, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, w * g, dp),
-                         lambda bi, hi, ji, off, tbl: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, dp),
-                         lambda bi, hi, ji, off, tbl:
-                         (tbl[bi, ji], 0, hi, 0)),
-            pl.BlockSpec((1, page_size, 1, dp),
-                         lambda bi, hi, ji, off, tbl:
-                         (tbl[bi, ji], 0, hi, 0)),
+            pl.BlockSpec((1, 1, w * g, dp), qmap),
+            pl.BlockSpec((1, page_size, 1, dp), kvmap),
+            pl.BlockSpec((1, page_size, 1, dp), kvmap),
         ],
-        out_specs=pl.BlockSpec((1, 1, w * g, dp),
-                               lambda bi, hi, ji, off, tbl: (bi, hi, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, w * g, dp), qmap),
         scratch_shapes=[
             pltpu.VMEM((w * g, 1), jnp.float32),
             pltpu.VMEM((w * g, 1), jnp.float32),
             pltpu.VMEM((w * g, dp), jnp.float32),
         ],
     )
+    kernel = _paged_verify_kernel_q if quant else _paged_verify_kernel
+    scalars = (q_off.astype(jnp.int32), page_table.astype(jnp.int32))
+    if quant:
+        scalars += (k_scale.astype(jnp.float32),
+                    v_scale.astype(jnp.float32))
     out = pl.pallas_call(
         functools.partial(
-            _paged_verify_kernel, page_size=page_size, n_pages=n_pages,
+            kernel, page_size=page_size, n_pages=n_pages,
             scale=scale, window=window, win=w, g=g),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, w * g, dp), q.dtype),
         interpret=interpret,
-    )(q_off.astype(jnp.int32), page_table.astype(jnp.int32),
-      qk, k_pool, v_pool)
+    )(*scalars, qk, k_pool, v_pool)
     return out.reshape(b, hkv, w, g, dp).transpose(0, 2, 1, 3, 4) \
               .reshape(b, w, hq, dp)[..., :d]
 
@@ -236,6 +370,8 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, page_table: jax.Array,
                            lengths: jax.Array, *, window: int = 0,
                            scale: Optional[float] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            interpret: Optional[bool] = None) -> jax.Array:
     """One-token attention against paged K/V pools.
 
@@ -247,11 +383,15 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
 
     A slot with length 0 (inactive) produces zeros — its output is
     discarded by the engine.
+
+    Quantized pools: pass ``k_scale``/``v_scale`` [P, Hkv] f32 (both or
+    neither) — the pools are then int8/fp8 codes, dequantized in-register.
     """
     b, _, hq, d = q.shape
     _, page_size, hkv, _ = k_pool.shape
     n_pages = page_table.shape[1]
     g = hq // hkv
+    quant = k_scale is not None
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     interpret = interpret_default() if interpret is None else interpret
     dp = d if interpret else round_up(d, LANE)
@@ -263,34 +403,40 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     # holds the G query heads that share KV head h.
     qk = q.reshape(b, hkv, g, dp)
 
+    n_scalars = 4 if quant else 2    # lengths, page_table (, k/v scales)
+
+    def qmap(bi, hi, ji, *scalars):
+        return (bi, hi, 0, 0)
+
+    def kvmap(bi, hi, ji, lens, tbl, *scalars):
+        return (tbl[bi, ji], 0, hi, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,           # lengths, page_table
+        num_scalar_prefetch=n_scalars,
         grid=(b, hkv, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, g, dp),
-                         lambda bi, hi, ji, lens, tbl: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, dp),
-                         lambda bi, hi, ji, lens, tbl:
-                         (tbl[bi, ji], 0, hi, 0)),
-            pl.BlockSpec((1, page_size, 1, dp),
-                         lambda bi, hi, ji, lens, tbl:
-                         (tbl[bi, ji], 0, hi, 0)),
+            pl.BlockSpec((1, 1, g, dp), qmap),
+            pl.BlockSpec((1, page_size, 1, dp), kvmap),
+            pl.BlockSpec((1, page_size, 1, dp), kvmap),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, dp),
-                               lambda bi, hi, ji, lens, tbl: (bi, hi, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, g, dp), qmap),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, dp), jnp.float32),
         ],
     )
+    kernel = _paged_decode_kernel_q if quant else _paged_decode_kernel
+    scalars = (lengths.astype(jnp.int32), page_table.astype(jnp.int32))
+    if quant:
+        scalars += (k_scale.astype(jnp.float32),
+                    v_scale.astype(jnp.float32))
     out = pl.pallas_call(
         functools.partial(
-            _paged_decode_kernel, page_size=page_size, n_pages=n_pages,
+            kernel, page_size=page_size, n_pages=n_pages,
             scale=scale, window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dp), q.dtype),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32),
-      qk, k_pool, v_pool)
+    )(*scalars, qk, k_pool, v_pool)
     return out.reshape(b, 1, hq, dp)[..., :d]

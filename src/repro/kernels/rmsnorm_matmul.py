@@ -29,11 +29,31 @@ def _kernel(x_ref, scale_ref, w_ref, o_ref, *, eps: float):
                          ).astype(o_ref.dtype)
 
 
+def _kernel_w8(x_ref, scale_ref, w_ref, ws_ref, o_ref, *, eps: float):
+    """Weight-only int8 body (DESIGN.md §14): ``w`` holds int8 codes with
+    per-output-channel f32 scales.  The dot runs codes-against-f32 and the
+    column scale is applied POST-dot — mathematically identical to
+    dequantizing the tile first (``x @ (codes * s) == (x @ codes) * s``
+    column by column), but streaming 1 byte/weight from HBM."""
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    normed = x * jax.lax.rsqrt(var + eps)
+    normed = normed * (1.0 + scale_ref[...].astype(jnp.float32))
+    acc = jnp.dot(normed, w_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = (acc * ws_ref[...][None, :]).astype(o_ref.dtype)
+
+
 def rmsnorm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                    eps: float = 1e-6, block_t: int = 256,
                    block_n: int = 512,
+                   w_scale: Optional[jax.Array] = None,
                    interpret: Optional[bool] = None) -> jax.Array:
-    """x: [T, D]; scale: [D]; w: [D, N] -> rms_norm(x) @ w  [T, N]."""
+    """x: [T, D]; scale: [D]; w: [D, N] -> rms_norm(x) @ w  [T, N].
+
+    ``w_scale`` [N]: weight-only int8 — ``w`` is int8 codes, dequantized
+    against the per-output-channel scales inside the kernel.
+    """
     t, d = x.shape
     d2, n = w.shape
     assert d == d2 and scale.shape == (d,)
@@ -41,15 +61,22 @@ def rmsnorm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
     bn = pick_block(n, block_n)
     grid = (t // bt, n // bn)
     interpret = interpret_default() if interpret is None else interpret
+    in_specs = [
+        pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((d,), lambda i, j: (0,)),
+        pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+    ]
+    operands = [x, scale, w]
+    kernel = _kernel
+    if w_scale is not None:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (j,)))
+        operands.append(w_scale.astype(jnp.float32))
+        kernel = _kernel_w8
     return pl.pallas_call(
-        functools.partial(_kernel, eps=eps),
+        functools.partial(kernel, eps=eps),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((d,), lambda i, j: (0,)),
-            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bt, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
         interpret=interpret,
-    )(x, scale, w)
+    )(*operands)

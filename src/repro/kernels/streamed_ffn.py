@@ -74,15 +74,56 @@ def _ffn_kernel(*refs, n_f: int, activation: str, norm_eps: Optional[float]):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _ffn_kernel_w8(*refs, n_f: int, activation: str,
+                   norm_eps: Optional[float]):
+    """Weight-only int8 body (DESIGN.md §14): wg/wu/wd are int8 codes with
+    per-output-channel f32 scales.  Gate/up scales apply pre-activation
+    (the nonlinearity needs real values); the down scale applies post-dot
+    per accumulation step — both exact per-column dequantizations, with
+    every weight streamed from HBM at 1 byte."""
+    if norm_eps is not None:
+        (x_ref, scale_ref, wg_ref, wgs_ref, wu_ref, wus_ref, wd_ref,
+         wds_ref, o_ref, acc_ref) = refs
+    else:
+        (x_ref, wg_ref, wgs_ref, wu_ref, wus_ref, wd_ref, wds_ref,
+         o_ref, acc_ref) = refs
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    if norm_eps is not None:
+        x = _rms_tile(x, scale_ref, norm_eps)
+    x32 = x.astype(jnp.float32)
+    gate = jnp.dot(x32, wg_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * wgs_ref[...][None]
+    up = jnp.dot(x32, wu_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32) * wus_ref[...][None]
+    h = _act(activation, gate) * up                     # stays in VMEM
+    acc_ref[...] += jnp.dot(h, wd_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32
+                            ) * wds_ref[...][None]
+
+    @pl.when(pl.program_id(1) == n_f - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 def streamed_ffn(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
                  *, activation: str = "silu",
                  norm_scale: Optional[jax.Array] = None,
                  norm_eps: float = 1e-6,
                  block_t: int = 256, block_f: int = 512,
+                 wg_scale: Optional[jax.Array] = None,
+                 wu_scale: Optional[jax.Array] = None,
+                 wd_scale: Optional[jax.Array] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
     """x: [T, D]; wg/wu: [D, F]; wd: [F, D] -> [T, D].
 
     ``norm_scale`` [D]: fold ``rms_norm(x, norm_scale)`` into the kernel.
+    ``wg_scale``/``wu_scale`` [F] + ``wd_scale`` [D]: weight-only int8 —
+    the weights are int8 codes dequantized in-kernel per output channel.
     """
     t, d = x.shape
     d2, f = wg.shape
@@ -91,21 +132,37 @@ def streamed_ffn(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
     bf = pick_block(f, block_f)
     grid = (t // bt, f // bf)
     interpret = interpret_default() if interpret is None else interpret
+    w8 = wg_scale is not None
 
     in_specs = [pl.BlockSpec((bt, d), lambda i, j: (i, 0))]
     operands = [x]
     if norm_scale is not None:
         in_specs.append(pl.BlockSpec((d,), lambda i, j: (0,)))
         operands.append(norm_scale)
-    in_specs += [
-        pl.BlockSpec((d, bf), lambda i, j: (0, j)),
-        pl.BlockSpec((d, bf), lambda i, j: (0, j)),
-        pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
-    ]
-    operands += [wg, wu, wd]
+    if w8:
+        in_specs += [
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf,), lambda i, j: (j,)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf,), lambda i, j: (j,)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ]
+        operands += [wg, wg_scale.astype(jnp.float32),
+                     wu, wu_scale.astype(jnp.float32),
+                     wd, wd_scale.astype(jnp.float32)]
+        kernel = _ffn_kernel_w8
+    else:
+        in_specs += [
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+        ]
+        operands += [wg, wu, wd]
+        kernel = _ffn_kernel
 
     return pl.pallas_call(
-        functools.partial(_ffn_kernel, n_f=grid[1], activation=activation,
+        functools.partial(kernel, n_f=grid[1], activation=activation,
                           norm_eps=norm_eps if norm_scale is not None
                           else None),
         grid=grid,
@@ -141,33 +198,80 @@ def _mlp_kernel(*refs, n_f: int, activation: str, norm_eps: Optional[float]):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _mlp_kernel_w8(*refs, n_f: int, activation: str,
+                   norm_eps: Optional[float]):
+    """Weight-only int8 ungated body (see ``_ffn_kernel_w8``)."""
+    if norm_eps is not None:
+        (x_ref, scale_ref, wu_ref, wus_ref, wd_ref, wds_ref,
+         o_ref, acc_ref) = refs
+    else:
+        x_ref, wu_ref, wus_ref, wd_ref, wds_ref, o_ref, acc_ref = refs
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    if norm_eps is not None:
+        x = _rms_tile(x, scale_ref, norm_eps)
+    x32 = x.astype(jnp.float32)
+    up = jnp.dot(x32, wu_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32) * wus_ref[...][None]
+    h = _act(activation, up)
+    acc_ref[...] += jnp.dot(h, wd_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32
+                            ) * wds_ref[...][None]
+
+    @pl.when(pl.program_id(1) == n_f - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 def streamed_mlp(x: jax.Array, wu: jax.Array, wd: jax.Array, *,
                  activation: str = "gelu",
                  norm_scale: Optional[jax.Array] = None,
                  norm_eps: float = 1e-6,
                  block_t: int = 256, block_f: int = 512,
+                 wu_scale: Optional[jax.Array] = None,
+                 wd_scale: Optional[jax.Array] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
-    """Ungated variant (GPT-2 / HuBERT): down(act(x @ Wu))."""
+    """Ungated variant (GPT-2 / HuBERT): down(act(x @ Wu)).
+
+    ``wu_scale`` [F] + ``wd_scale`` [D]: weight-only int8 codes.
+    """
     t, d = x.shape
     _, f = wu.shape
     bt = pick_block(t, block_t)
     bf = pick_block(f, block_f)
     grid = (t // bt, f // bf)
     interpret = interpret_default() if interpret is None else interpret
+    w8 = wu_scale is not None
 
     in_specs = [pl.BlockSpec((bt, d), lambda i, j: (i, 0))]
     operands = [x]
     if norm_scale is not None:
         in_specs.append(pl.BlockSpec((d,), lambda i, j: (0,)))
         operands.append(norm_scale)
-    in_specs += [
-        pl.BlockSpec((d, bf), lambda i, j: (0, j)),
-        pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
-    ]
-    operands += [wu, wd]
+    if w8:
+        in_specs += [
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf,), lambda i, j: (j,)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ]
+        operands += [wu, wu_scale.astype(jnp.float32),
+                     wd, wd_scale.astype(jnp.float32)]
+        kernel = _mlp_kernel_w8
+    else:
+        in_specs += [
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+        ]
+        operands += [wu, wd]
+        kernel = _mlp_kernel
 
     return pl.pallas_call(
-        functools.partial(_mlp_kernel, n_f=grid[1], activation=activation,
+        functools.partial(kernel, n_f=grid[1], activation=activation,
                           norm_eps=norm_eps if norm_scale is not None
                           else None),
         grid=grid,

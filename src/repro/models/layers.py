@@ -121,6 +121,37 @@ def apply_norm(kind: str, x: jax.Array, p: Params) -> jax.Array:
 
 
 # --------------------------------------------------------------------- #
+# Weight-only int8 (DESIGN.md §14)
+# --------------------------------------------------------------------- #
+
+def quantize_channelwise(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8: w [D, N] -> (codes int8, scales
+    [N] f32 with scale = amax|col| / 127).  An all-zero column encodes to
+    zero codes with scale 0 (dequant stays exact)."""
+    w32 = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=0)
+    scales = amax / 127.0
+    safe = jnp.where(scales > 0.0, scales, 1.0)
+    codes = jnp.clip(jnp.round(w32 / safe), -127.0, 127.0).astype(jnp.int8)
+    return codes, scales
+
+
+def dequantize_channelwise(codes: jax.Array, scales: jax.Array,
+                           dtype) -> jax.Array:
+    return (codes.astype(jnp.float32) * scales[None, :]).astype(dtype)
+
+
+def _w8_ste(w: jax.Array) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient: the forward
+    value carries the int8 rounding (matching the fused w8 kernels bit for
+    bit in the eager reference), the backward passes cotangents through as
+    if ``w`` were untouched."""
+    codes, scales = quantize_channelwise(w)
+    wq = dequantize_channelwise(codes, scales, w.dtype)
+    return w + lax.stop_gradient(wq - w)
+
+
+# --------------------------------------------------------------------- #
 # Rotary embeddings (RoPE and M-RoPE)
 # --------------------------------------------------------------------- #
 
@@ -604,7 +635,8 @@ def _flat_tokens(x: jax.Array) -> Tuple[jax.Array, Tuple[int, int]]:
 
 def fused_norm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                       eps: float = 1e-6, block_t: int = 256,
-                      block_n: int = 512, shard=()) -> jax.Array:
+                      block_n: int = 512, w8: int = 0,
+                      shard=()) -> jax.Array:
     """rms_norm(x) @ w via the ``rmsnorm_matmul`` Pallas kernel.
 
     x: [B, S, D]; w: [D, N] -> [B, S, N].  The normalized activation lives
@@ -612,16 +644,29 @@ def fused_norm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
     mesh the plan's ``shard`` claim runs the kernel column-parallel: batch
     over 'data', output columns over 'model' (no collective — each shard
     normalizes the full D row and produces its own columns).
+
+    ``w8`` (plan block flag, DESIGN.md §14): weight-only int8 — the weight
+    is quantized per output channel in-trace and the kernel dequantizes
+    post-dot against the column scales.  Under a column-parallel claim the
+    quantization runs per shard on its own columns (scales are
+    per-output-channel, so the split is exact).  The eager reference is the
+    dequantized matmul with a straight-through backward.
     """
     from ..kernels import rmsnorm_matmul as _kernel
 
     def fused(x, scale, w):
         xf, (b, s) = _flat_tokens(x)
-        y = _kernel(xf, scale, w, eps=eps, block_t=block_t, block_n=block_n)
+        if w8:
+            codes, ws = quantize_channelwise(w)
+            y = _kernel(xf, scale, codes, eps=eps, block_t=block_t,
+                        block_n=block_n, w_scale=ws)
+        else:
+            y = _kernel(xf, scale, w, eps=eps, block_t=block_t,
+                        block_n=block_n)
         return y.reshape(b, s, w.shape[-1])
 
     def eager(x, scale, w):
-        return rms_norm(x, scale, eps) @ w
+        return rms_norm(x, scale, eps) @ (_w8_ste(w) if w8 else w)
 
     mesh = _shard_mesh(shard)
     bax = _claim_axis(mesh, shard, "tokens", x.shape[0])
@@ -660,7 +705,7 @@ def fused_matmul(x: jax.Array, w: jax.Array, *, block_t: int = 256,
 
 def fused_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
               norm_scale: Optional[jax.Array] = None,
-              block_t: int = 256, block_f: int = 512,
+              block_t: int = 256, block_f: int = 512, w8: int = 0,
               shard=()) -> jax.Array:
     """Stream-fused (GLU) FFN; with ``norm_scale`` the pre-FFN RMSNorm is
     folded into the kernel so the normalized stream never leaves VMEM.
@@ -669,6 +714,10 @@ def fused_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
     shard streams its own F columns of wg/wu and F rows of wd, and the
     partial [B, S, D] outputs are psum'd over the model axis (the gate
     activation is elementwise in F, so the split is exact math).
+
+    ``w8``: weight-only int8 on all three projections (per-output-channel
+    scales quantized in-trace; under a d_ff claim each shard scales its
+    own slice).  Eager reference dequantizes with straight-through grads.
     """
     from ..kernels import streamed_ffn, streamed_mlp
 
@@ -680,14 +729,21 @@ def fused_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
     if gated:
         def fused(x, wg, wu, wd, *norm):
             xf, (b, s) = _flat_tokens(x)
+            qkw = {}
+            if w8:
+                wg, qkw["wg_scale"] = quantize_channelwise(wg)
+                wu, qkw["wu_scale"] = quantize_channelwise(wu)
+                wd, qkw["wd_scale"] = quantize_channelwise(wd)
             y = streamed_ffn(xf, wg, wu, wd, activation=activation,
                              norm_scale=norm[0] if norm else None,
-                             block_t=block_t, block_f=block_f)
+                             block_t=block_t, block_f=block_f, **qkw)
             y = y.reshape(b, s, -1)
             return lax.psum(y, fax) if fax else y
 
         def eager(x, wg, wu, wd, *norm):
             h = rms_norm(x, norm[0]) if norm else x
+            if w8:
+                wg, wu, wd = _w8_ste(wg), _w8_ste(wu), _w8_ste(wd)
             return (_act(activation, h @ wg) * (h @ wu)) @ wd
 
         args = (x, p["wg"], p["wu"], p["wd"])
@@ -695,14 +751,20 @@ def fused_ffn(x: jax.Array, p: Params, *, activation: str, gated: bool,
     else:
         def fused(x, wu, wd, *norm):
             xf, (b, s) = _flat_tokens(x)
+            qkw = {}
+            if w8:
+                wu, qkw["wu_scale"] = quantize_channelwise(wu)
+                wd, qkw["wd_scale"] = quantize_channelwise(wd)
             y = streamed_mlp(xf, wu, wd, activation=activation,
                              norm_scale=norm[0] if norm else None,
-                             block_t=block_t, block_f=block_f)
+                             block_t=block_t, block_f=block_f, **qkw)
             y = y.reshape(b, s, -1)
             return lax.psum(y, fax) if fax else y
 
         def eager(x, wu, wd, *norm):
             h = rms_norm(x, norm[0]) if norm else x
+            if w8:
+                wu, wd = _w8_ste(wu), _w8_ste(wd)
             return _act(activation, h @ wu) @ wd
 
         args = (x, p["wu"], p["wd"])
@@ -798,34 +860,52 @@ def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def fused_attention_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
                           q_offset, kv_len, *, causal: bool = True,
                           window: int = 0, block_q: int = 512,
-                          block_kv: int = 512, shard=()) -> jax.Array:
+                          block_kv: int = 512,
+                          k_scale: Optional[jax.Array] = None,
+                          v_scale: Optional[jax.Array] = None,
+                          shard=()) -> jax.Array:
     """Chunked-prefill twin of ``fused_attention``: the offset flash
     kernel with dynamic ``q_offset`` / ``kv_len`` scalar-prefetch
     operands, dispatched under the plan's sharding (KV heads over the
     model axis; the scalars replicate).  Serving-only — no VJP pairing
-    (prefill is never differentiated)."""
+    (prefill is never differentiated).
+
+    Quantized KV: ``k_scale``/``v_scale`` [B, Skv, Hkv] per-position f32
+    scales (page-scale rows repeated over page positions) — k/v are then
+    int8/fp8 codes and the kernel dequantizes in-register."""
     from ..kernels import flash_attention
 
-    def call(q, k, v, off, kl):
+    quant = k_scale is not None
+
+    def call(q, k, v, off, kl, *scales):
+        ks, vs = scales if scales else (None, None)
         return flash_attention(q, k, v, causal=causal, window=window,
                                q_offset=off, kv_len=kl,
-                               block_q=block_q, block_kv=block_kv)
+                               block_q=block_q, block_kv=block_kv,
+                               k_scale=ks, v_scale=vs)
 
     mesh = _shard_mesh(shard)
     hax = _claim_axis(mesh, shard, "kv_heads", k.shape[2])
     bax = _claim_axis(mesh, shard, "batch", q.shape[0])
     if hax or bax:
         sp = P(bax, None, hax, None)
-        call = _smap(call, mesh, (sp, sp, sp, P(), P()), sp)
+        in_specs = (sp, sp, sp, P(), P())
+        if quant:
+            in_specs += (P(bax, None, hax), P(bax, None, hax))
+        call = _smap(call, mesh, in_specs, sp)
     else:
         DISPATCH_RECORDS["single"] += 1
+    extra = ((k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+             if quant else ())
     return call(q, k, v, jnp.asarray(q_offset, jnp.int32),
-                jnp.asarray(kv_len, jnp.int32))
+                jnp.asarray(kv_len, jnp.int32), *extra)
 
 
 def fused_paged_attention(q: jax.Array, k_pool: jax.Array,
                           v_pool: jax.Array, page_table: jax.Array,
                           lengths: jax.Array, *, window: int = 0,
+                          k_scale: Optional[jax.Array] = None,
+                          v_scale: Optional[jax.Array] = None,
                           shard=()) -> jax.Array:
     """Paged decode attention under the plan's sharding: the KV page
     pools split over the model axis at the ``kv_heads`` dim (matching the
@@ -833,50 +913,70 @@ def fused_paged_attention(q: jax.Array, k_pool: jax.Array,
     claim the page table and lengths split by slot alongside q, so each
     data shard prefetches only its own slots' table rows (the pools stay
     whole on the page dim within a shard, so every row still resolves).
-    Serving-only — no VJP pairing."""
+    Serving-only — no VJP pairing.
+
+    Quantized KV: ``k_scale``/``v_scale`` [P, Hkv] per-page f32 scale
+    pools (sharded with the pools at ``kv_heads``) — the pools are then
+    int8/fp8 codes and the kernel dequantizes in-register per page."""
     from ..kernels import paged_decode_attention
 
-    def call(q, kp, vp, tbl, lens):
-        return paged_decode_attention(q, kp, vp, tbl, lens, window=window)
+    quant = k_scale is not None
+
+    def call(q, kp, vp, tbl, lens, *scales):
+        ks, vs = scales if scales else (None, None)
+        return paged_decode_attention(q, kp, vp, tbl, lens, window=window,
+                                      k_scale=ks, v_scale=vs)
 
     mesh = _shard_mesh(shard)
     hax = _claim_axis(mesh, shard, "kv_heads", k_pool.shape[2])
     bax = _claim_axis(mesh, shard, "batch", q.shape[0])
     if hax or bax:
-        call = _smap(call, mesh,
-                     (P(bax, None, hax, None), P(None, None, hax, None),
-                      P(None, None, hax, None), P(bax, None), P(bax)),
-                     P(bax, None, hax, None))
+        in_specs = (P(bax, None, hax, None), P(None, None, hax, None),
+                    P(None, None, hax, None), P(bax, None), P(bax))
+        if quant:
+            in_specs += (P(None, hax), P(None, hax))
+        call = _smap(call, mesh, in_specs, P(bax, None, hax, None))
     else:
         DISPATCH_RECORDS["single"] += 1
-    return call(q, k_pool, v_pool, page_table, lengths)
+    extra = (k_scale, v_scale) if quant else ()
+    return call(q, k_pool, v_pool, page_table, lengths, *extra)
 
 
 def fused_verify_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, page_table: jax.Array,
                            q_off: jax.Array, *, window: int = 0,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            shard=()) -> jax.Array:
     """Speculative-verify attention under the plan's sharding: identical
     dispatch contract to ``fused_paged_attention`` (KV pools split over
     the model axis at ``kv_heads``, slots over 'data'), with the W-row
     verify window riding in the query block — one kernel launch scores
-    every draft position of every slot.  Serving-only — no VJP pairing."""
+    every draft position of every slot.  Serving-only — no VJP pairing.
+    Quantized KV rides the same ``k_scale``/``v_scale`` [P, Hkv] contract
+    as ``fused_paged_attention``."""
     from ..kernels import paged_verify_attention
 
-    def call(q, kp, vp, tbl, off):
-        return paged_verify_attention(q, kp, vp, tbl, off, window=window)
+    quant = k_scale is not None
+
+    def call(q, kp, vp, tbl, off, *scales):
+        ks, vs = scales if scales else (None, None)
+        return paged_verify_attention(q, kp, vp, tbl, off, window=window,
+                                      k_scale=ks, v_scale=vs)
 
     mesh = _shard_mesh(shard)
     hax = _claim_axis(mesh, shard, "kv_heads", k_pool.shape[2])
     bax = _claim_axis(mesh, shard, "batch", q.shape[0])
     if hax or bax:
-        call = _smap(call, mesh,
-                     (P(bax, None, hax, None), P(None, None, hax, None),
-                      P(None, None, hax, None), P(bax, None), P(bax)),
-                     P(bax, None, hax, None))
+        in_specs = (P(bax, None, hax, None), P(None, None, hax, None),
+                    P(None, None, hax, None), P(bax, None), P(bax))
+        if quant:
+            in_specs += (P(None, hax), P(None, hax))
+        call = _smap(call, mesh, in_specs, P(bax, None, hax, None))
     else:
         DISPATCH_RECORDS["single"] += 1
-    return call(q, k_pool, v_pool, page_table, q_off)
+    extra = (k_scale, v_scale) if quant else ()
+    return call(q, k_pool, v_pool, page_table, q_off, *extra)
 
 
 def fused_mamba2_ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array,

@@ -546,8 +546,9 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
     """
     # Function-local for the same circular-import reason as the decode
     # path: serving imports models at module load.
-    from ..serving.kv_cache import (gather_pages, live_page_table,
-                                    place_chunk_pages)
+    from ..serving.kv_cache import (gather_pages, gather_pages_dequant,
+                                    live_page_table, place_chunk_pages,
+                                    place_chunk_pages_q)
     b, c, d = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
     layout = cfg.kv_cache_layout
@@ -562,35 +563,61 @@ def _attn_block_chunk(cfg: ModelConfig, p: Tree, x: jax.Array, cache: Tree,
     k = L.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
     k_new = k.transpose(0, 2, 1, 3) if layout == "bhsd" else k
     v_new = v.transpose(0, 2, 1, 3) if layout == "bhsd" else v
-    kc = place_chunk_pages(cache["k"], k_new, chunk_pages, layout=layout,
-                           cow_src=cow_src, cow_dst=cow_dst)
-    vc = place_chunk_pages(cache["v"], v_new, chunk_pages, layout=layout,
-                           cow_src=cow_src, cow_dst=cow_dst)
+    quant = "k_scale" in cache
+    if quant:
+        kc, ks = place_chunk_pages_q(cache["k"], cache["k_scale"], k_new,
+                                     chunk_pages, layout=layout,
+                                     cow_src=cow_src, cow_dst=cow_dst)
+        vc, vs = place_chunk_pages_q(cache["v"], cache["v_scale"], v_new,
+                                     chunk_pages, layout=layout,
+                                     cow_src=cow_src, cow_dst=cow_dst)
+    else:
+        kc = place_chunk_pages(cache["k"], k_new, chunk_pages, layout=layout,
+                               cow_src=cow_src, cow_dst=cow_dst)
+        vc = place_chunk_pages(cache["v"], v_new, chunk_pages, layout=layout,
+                               cow_src=cow_src, cow_dst=cow_dst)
     # Bound KV traffic by the live prefix: the gather touches O(prefix)
     # distinct pages instead of the slot's full table extent (masking at
     # kv_len already discards the dead rows' scores).
     row_live = live_page_table(table_row, kv_len, cache["k"].shape[1])
-    kseq = gather_pages(kc, row_live[None], layout=layout)
-    vseq = gather_pages(vc, row_live[None], layout=layout)
+    choice = lplan.attention if lplan is not None else None
+    fused = choice is not None and choice.fused
+    if quant and not fused:
+        # Eager reference: dense dequantized K/V through the same
+        # streaming-attention path the f32 cache takes.
+        kseq = gather_pages_dequant(kc, ks, row_live[None], layout=layout)
+        vseq = gather_pages_dequant(vc, vs, row_live[None], layout=layout)
+    else:
+        kseq = gather_pages(kc, row_live[None], layout=layout)
+        vseq = gather_pages(vc, row_live[None], layout=layout)
     if layout == "bhsd":
         kseq = kseq.transpose(0, 2, 1, 3)
         vseq = vseq.transpose(0, 2, 1, 3)
-    choice = lplan.attention if lplan is not None else None
-    if choice is not None and choice.fused:
+    if fused:
         # The plan's flash kernel, offset twin: q_offset/kv_len ride in as
         # scalar-prefetch operands so one compiled program covers every
         # chunk index over any cache fill; the sharded dispatch (and the
         # shard_map it builds) comes from the plan's sharding claim.
+        # Quantized: K/V stay codes and the per-page scale rows expand to
+        # per-position scale lanes the kernel consumes next to each tile.
+        scl = {}
+        if quant:
+            ps_ = cache["k"].shape[1]
+            scl = {"k_scale": jnp.repeat(ks[row_live], ps_, axis=0)[None],
+                   "v_scale": jnp.repeat(vs[row_live], ps_, axis=0)[None]}
         o = L.fused_attention_chunk(q, kseq, vseq, offset, kv_len,
                                     causal=cfg.causal, window=window,
-                                    **choice.kw)
+                                    **scl, **choice.kw)
     else:
         o = L.streaming_attention(q, kseq, vseq, causal=cfg.causal,
                                   q_offset=offset, window=window,
                                   kv_len=kv_len)
     x = x + o.reshape(b, c, hq * hd) @ ap["wo"]
     x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
-    return x, {"k": kc, "v": vc}
+    new_kv = {"k": kc, "v": vc}
+    if quant:
+        new_kv.update(k_scale=ks, v_scale=vs)
+    return x, new_kv
 
 
 def _apply_block_chunk(cfg: ModelConfig, kind: str, p: Tree, x: jax.Array,
@@ -763,27 +790,40 @@ def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
         # function-local (hoisting it is a circular import).  The
         # primitives are pure array ops; they live in serving because
         # that's where the page allocator that owns their layout lives.
-        from ..serving.kv_cache import (gather_pages, live_page_table,
-                                        paged_append)
+        from ..serving.kv_cache import (gather_pages, gather_pages_dequant,
+                                        live_page_table, paged_append,
+                                        paged_append_q)
         pos_v = pos[:, 0]
-        kc = paged_append(cache["k"], page_table, pos_v, k_new,
-                          layout=layout)
-        vc = paged_append(cache["v"], page_table, pos_v, v_new,
-                          layout=layout)
+        quant = "k_scale" in cache
+        ks = vs = None
+        if quant:
+            kc, ks = paged_append_q(cache["k"], cache["k_scale"],
+                                    page_table, pos_v, k_new, layout=layout)
+            vc, vs = paged_append_q(cache["v"], cache["v_scale"],
+                                    page_table, pos_v, v_new, layout=layout)
+        else:
+            kc = paged_append(cache["k"], page_table, pos_v, k_new,
+                              layout=layout)
+            vc = paged_append(cache["v"], page_table, pos_v, v_new,
+                              layout=layout)
         choice = lplan.decode_attn if lplan is not None else None
         if choice is not None and choice.fused:
             o = L.fused_paged_attention(q, kc, vc, page_table, lengths + 1,
-                                        window=window,
-                                        shard=choice.sharding)
+                                        window=window, k_scale=ks,
+                                        v_scale=vs, shard=choice.sharding)
         else:
             # Bound the gather by each slot's live prefix, mirroring the
             # chunk path (the length mask already discards dead rows).
             tbl_live = live_page_table(page_table, lengths + 1,
                                        cache["k"].shape[1])
-            o = L.decode_attention(
-                q, gather_pages(kc, tbl_live, layout=layout),
-                gather_pages(vc, tbl_live, layout=layout),
-                lengths + 1, window=window, layout=layout)
+            if quant:
+                kd = gather_pages_dequant(kc, ks, tbl_live, layout=layout)
+                vd = gather_pages_dequant(vc, vs, tbl_live, layout=layout)
+            else:
+                kd = gather_pages(kc, tbl_live, layout=layout)
+                vd = gather_pages(vc, tbl_live, layout=layout)
+            o = L.decode_attention(q, kd, vd, lengths + 1, window=window,
+                                   layout=layout)
     else:
         from .params import kv_seq_axis
         ax = kv_seq_axis(layout)
@@ -803,7 +843,10 @@ def _attn_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
                                layout=layout)
     x = x + o.reshape(b, 1, hq * hd) @ ap["wo"]
     x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
-    return x, {"k": kc, "v": vc}
+    new_kv = {"k": kc, "v": vc}
+    if page_table is not None and "k_scale" in cache:
+        new_kv.update(k_scale=ks, v_scale=vs)
+    return x, new_kv
 
 
 def _mamba_block_decode(cfg: ModelConfig, p: Tree, x: jax.Array,
@@ -882,7 +925,8 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Tree, shared: Tree,
         return _mamba_block_decode(cfg, p, x, cache)
     if kind == "mamba+shared_attn":
         mamba_cache = {"ssm": cache["ssm"], "conv": cache["conv"]}
-        attn_cache = {"k": cache["k"], "v": cache["v"]}
+        attn_cache = {n: cache[n] for n in ("k", "v", "k_scale", "v_scale")
+                      if n in cache}
         x, nm = _mamba_block_decode(cfg, p, x, mamba_cache)
         x, na = _attn_block_decode(cfg, shared, x, attn_cache, cache_pos,
                                    lengths, lplan=lplan,
@@ -998,8 +1042,9 @@ def _attn_block_verify(cfg: ModelConfig, p: Tree, x: jax.Array,
         raise NotImplementedError(
             "verify_step requires the paged KV cache (rollback is a "
             "page-table edit; the contiguous cache has no equivalent)")
-    from ..serving.kv_cache import (gather_pages, live_page_table,
-                                    paged_append_window)
+    from ..serving.kv_cache import (gather_pages, gather_pages_dequant,
+                                    live_page_table, paged_append_window,
+                                    paged_append_window_q)
     b, w, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
     layout = cfg.kv_cache_layout
@@ -1015,24 +1060,42 @@ def _attn_block_verify(cfg: ModelConfig, p: Tree, x: jax.Array,
     k = L.apply_positional(cfg.rope, k, pos, cfg.rope_theta)
     k_new = k.transpose(0, 2, 1, 3) if layout == "bhsd" else k
     v_new = v.transpose(0, 2, 1, 3) if layout == "bhsd" else v
-    kc = paged_append_window(cache["k"], page_table, pos0, k_new,
-                             layout=layout)
-    vc = paged_append_window(cache["v"], page_table, pos0, v_new,
-                             layout=layout)
+    quant = "k_scale" in cache
+    ks = vs = None
+    if quant:
+        kc, ks = paged_append_window_q(cache["k"], cache["k_scale"],
+                                       page_table, pos0, k_new,
+                                       layout=layout)
+        vc, vs = paged_append_window_q(cache["v"], cache["v_scale"],
+                                       page_table, pos0, v_new,
+                                       layout=layout)
+    else:
+        kc = paged_append_window(cache["k"], page_table, pos0, k_new,
+                                 layout=layout)
+        vc = paged_append_window(cache["v"], page_table, pos0, v_new,
+                                 layout=layout)
     choice = lplan.verify_attn if lplan is not None else None
     if choice is not None and choice.fused:
         o = L.fused_verify_attention(q, kc, vc, page_table, lengths,
-                                     window=window, shard=choice.sharding)
+                                     window=window, k_scale=ks, v_scale=vs,
+                                     shard=choice.sharding)
     else:
         tbl_live = live_page_table(page_table, lengths + w,
                                    cache["k"].shape[1])
-        o = L.verify_attention(
-            q, gather_pages(kc, tbl_live, layout=layout),
-            gather_pages(vc, tbl_live, layout=layout),
-            lengths, window=window, layout=layout)
+        if quant:
+            kd = gather_pages_dequant(kc, ks, tbl_live, layout=layout)
+            vd = gather_pages_dequant(vc, vs, tbl_live, layout=layout)
+        else:
+            kd = gather_pages(kc, tbl_live, layout=layout)
+            vd = gather_pages(vc, tbl_live, layout=layout)
+        o = L.verify_attention(q, kd, vd, lengths, window=window,
+                               layout=layout)
     x = x + o.reshape(b, w, hq * hd) @ ap["wo"]
     x = x + _ffn_block(cfg, p["mlp"], x, p["ln2"], lplan)
-    return x, {"k": kc, "v": vc}
+    new_kv = {"k": kc, "v": vc}
+    if quant:
+        new_kv.update(k_scale=ks, v_scale=vs)
+    return x, new_kv
 
 
 def _apply_block_verify(cfg: ModelConfig, kind: str, p: Tree, x: jax.Array,

@@ -287,6 +287,10 @@ def param_bytes(cfg: ModelConfig) -> int:
 KV_CACHE_LEAVES = ("k", "v")                       # carry a sequence axis
 STATE_CACHE_LEAVES = ("ssm", "conv", "wkv",        # slot-contiguous state
                       "tm_shift", "cm_shift")
+# Per-page f32 dequant scales riding next to quantized paged K/V pools
+# ([G, num_pages, Hkv]; DESIGN.md §14).  Only present in paged quantized
+# cache trees — the contiguous decode cache never quantizes.
+SCALE_CACHE_LEAVES = ("k_scale", "v_scale")
 
 
 def cache_leaf_name(path) -> str:
@@ -296,14 +300,17 @@ def cache_leaf_name(path) -> str:
 
 
 def cache_leaf_kind(name: str) -> str:
-    """'kv' (paged / sequence-carrying) or 'state' (slot-contiguous)."""
+    """'kv' (paged / sequence-carrying), 'scale' (per-page dequant scales)
+    or 'state' (slot-contiguous)."""
     if name in KV_CACHE_LEAVES:
         return "kv"
+    if name in SCALE_CACHE_LEAVES:
+        return "scale"
     if name in STATE_CACHE_LEAVES:
         return "state"
     raise ValueError(
-        f"unregistered cache leaf {name!r}: add it to KV_CACHE_LEAVES or "
-        "STATE_CACHE_LEAVES in models/params.py")
+        f"unregistered cache leaf {name!r}: add it to KV_CACHE_LEAVES, "
+        "SCALE_CACHE_LEAVES or STATE_CACHE_LEAVES in models/params.py")
 
 
 def kv_seq_axis(layout: str) -> int:

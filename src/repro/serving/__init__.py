@@ -1,9 +1,14 @@
 """Serving runtime: continuous-batching engine over a paged KV cache
 with radix-tree prefix sharing."""
+from .accuracy import QUANT_MODES, jitter_params, run_accuracy, run_suite
 from .engine import Request, ServingEngine
 from .kv_cache import (PagedKVCache, cow_copy_pool, gather_pages,
-                       paged_append, place_chunk_pages, place_prefill)
+                       gather_pages_dequant, paged_append, paged_append_q,
+                       place_chunk_pages, place_chunk_pages_q,
+                       place_prefill, quantize_kv)
 from .prefix_cache import PrefixCache, PrefixHit
 __all__ = ["Request", "ServingEngine", "PagedKVCache", "PrefixCache",
-           "PrefixHit", "cow_copy_pool", "gather_pages", "paged_append",
-           "place_chunk_pages", "place_prefill"]
+           "PrefixHit", "QUANT_MODES", "cow_copy_pool", "gather_pages",
+           "gather_pages_dequant", "jitter_params", "paged_append",
+           "paged_append_q", "place_chunk_pages", "place_chunk_pages_q",
+           "place_prefill", "quantize_kv", "run_accuracy", "run_suite"]

@@ -1,0 +1,183 @@
+"""Accuracy gate for quantized serving.
+
+Every ``QuantMode`` is scored against the f32 (``quant="none"``)
+reference along the reference's own greedy trajectory (teacher
+forcing), so logits are comparable at every step:
+
+* ``max_logit_err`` — max absolute logit difference across the prefill
+  read-out and every decode step;
+* ``tokens_equal``  — whether the quantized argmax agrees with the
+  reference at every step.  Under teacher forcing, per-step argmax
+  agreement is exactly greedy-stream equality (by induction the
+  trajectories coincide until the first mismatch).
+
+``run_suite`` sweeps the ``configs/`` registry (skipping architectures
+the paged engine cannot serve) and is the gate the quant CI job and
+``tests/test_quantized.py`` run.  ``python -m repro.serving.accuracy``
+prints the table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, ModelConfig, get_config
+from ..models import init_params
+from ..models.model import decode_step, prefill_chunk
+from .kv_cache import PagedKVCache, stage_chunk
+
+QUANT_MODES: Tuple[str, ...] = ("kv_int8", "kv_fp8", "w8", "w8_kv8")
+
+
+def jitter_params(params, seed: int = 0, sigma: float = 0.05):
+    """Add small Gaussian noise to every float leaf.
+
+    ``init_params`` zero-initialises norm scales, which under the raw
+    ``layer_norm`` convention makes layernorm configs (gpt2) emit
+    identically-zero logits — any parity check on them would pass
+    vacuously.  Jittered parameters make the accuracy gate real for
+    every architecture.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    key = jax.random.PRNGKey(seed ^ 0x5EED)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            noise = jax.random.normal(jax.random.fold_in(key, i),
+                                      leaf.shape, jnp.float32)
+            leaf = (leaf.astype(jnp.float32)
+                    + sigma * noise).astype(leaf.dtype)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def supports_quantized_serving(cfg: ModelConfig) -> bool:
+    """Paged KV quantization needs a decoder with attention KV pages."""
+    return (not cfg.encoder_only) and (not cfg.rwkv) and cfg.num_kv_heads > 0
+
+
+def _greedy_rollout(params, cfg: ModelConfig, kv: PagedKVCache,
+                    prompt: np.ndarray, steps: int,
+                    forced: Optional[List[int]] = None,
+                    ) -> Tuple[List[int], List[np.ndarray]]:
+    """Prefill ``prompt`` into slot 0 then decode ``steps`` tokens.
+
+    When ``forced`` is given the input token at each decode step comes
+    from it (teacher forcing); the returned token list is still the
+    model's own argmax at each step.  Returns (argmax tokens, logits
+    per step) where entry 0 is the prefill read-out.
+    """
+    cache = kv.init_cache()
+    plen = len(prompt)
+    kv.ensure(0, plen + steps + 1)
+    row = kv.table_row(0)
+    chunk = max(kv.page_size, 1 << (plen - 1).bit_length())
+    toks, cpages, last = stage_chunk(prompt, 0, chunk, row, kv.page_size)
+    _, logits, cache = prefill_chunk(
+        params, cfg, jnp.asarray(toks)[None], cache, jnp.asarray(row),
+        jnp.asarray(cpages), jnp.int32(0), jnp.int32(last))
+    steps_logits = [np.asarray(logits, np.float32).reshape(-1)]
+    out = [int(steps_logits[0].argmax())]
+    table = kv.page_table
+    for i in range(steps - 1):
+        tok = forced[i] if forced is not None else out[-1]
+        pos = jnp.asarray([plen + i], jnp.int32)
+        _, logits, cache = decode_step(
+            params, cfg, jnp.asarray([[tok]], jnp.int32), cache, pos, pos,
+            page_table=table)
+        steps_logits.append(np.asarray(logits, np.float32).reshape(-1))
+        out.append(int(steps_logits[-1].argmax()))
+    return out, steps_logits
+
+
+def run_accuracy(cfg_or_arch, modes: Iterable[str] = QUANT_MODES, *,
+                 prompt_len: int = 16, steps: int = 8, seed: int = 0,
+                 page_size: int = 8, fused: Optional[bool] = None,
+                 ) -> Dict[str, Dict[str, object]]:
+    """Score ``modes`` against the quant="none" reference for one config.
+
+    Returns ``{mode: {"max_logit_err", "tokens_equal", "kv_itemsize",
+    "tokens"}}`` plus a ``"none"`` entry holding the reference tokens.
+    """
+    cfg = get_config(cfg_or_arch).reduced() \
+        if isinstance(cfg_or_arch, str) else cfg_or_arch
+    if not supports_quantized_serving(cfg):
+        raise ValueError(f"{cfg.name} cannot serve quantized KV pages")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if fused is not None:
+        cfg = dataclasses.replace(cfg, use_fused_kernels=fused)
+    params = jitter_params(init_params(jax.random.PRNGKey(seed), cfg),
+                           seed=seed)
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(1, cfg.vocab_size, prompt_len).astype(np.int32)
+    max_len = prompt_len + steps + page_size
+
+    def fresh_kv(c):
+        return PagedKVCache(c, slots=1, max_len=max_len, page_size=page_size)
+
+    ref_cfg = dataclasses.replace(cfg, quant="none")
+    ref_tokens, ref_logits = _greedy_rollout(
+        params, ref_cfg, fresh_kv(ref_cfg), prompt, steps)
+    report: Dict[str, Dict[str, object]] = {
+        "none": {"tokens": ref_tokens, "max_logit_err": 0.0,
+                 "tokens_equal": True, "kv_itemsize": 4.0},
+    }
+    for mode in modes:
+        qcfg = dataclasses.replace(cfg, quant=mode)
+        qkv = fresh_kv(qcfg)
+        q_tokens, q_logits = _greedy_rollout(
+            params, qcfg, qkv, prompt, steps, forced=ref_tokens[:-1])
+        err = max(float(np.abs(a - b).max())
+                  for a, b in zip(ref_logits, q_logits))
+        report[mode] = {
+            "max_logit_err": err,
+            "tokens_equal": q_tokens == ref_tokens,
+            "kv_itemsize": float(qkv.kv_itemsize_effective),
+            "tokens": q_tokens,
+        }
+    return report
+
+
+def run_suite(archs: Optional[Iterable[str]] = None,
+              modes: Iterable[str] = QUANT_MODES, **kw,
+              ) -> Dict[str, Dict[str, Dict[str, object]]]:
+    """Accuracy reports for every (servable) arch in the registry."""
+    if archs is None:
+        archs = [a for a in ARCHS
+                 if supports_quantized_serving(ARCHS[a])]
+    return {a: run_accuracy(a, modes, **kw) for a in archs}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch ids (default: all servable)")
+    ap.add_argument("--modes", default=",".join(QUANT_MODES))
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--fused", action="store_true")
+    args = ap.parse_args(argv)
+    archs = args.archs.split(",") if args.archs else None
+    suite = run_suite(archs, modes=args.modes.split(","), steps=args.steps,
+                      fused=True if args.fused else None)
+    bad = 0
+    for arch, rep in suite.items():
+        for mode, r in rep.items():
+            if mode == "none":
+                continue
+            flag = "OK " if r["tokens_equal"] else "DIV"
+            bad += not r["tokens_equal"] and mode in ("kv_int8", "w8_kv8") \
+                and arch in ("gpt2", "llama3-8b")
+            print(f"{arch:>22s} {mode:>8s}  {flag}  "
+                  f"max|dlogit|={r['max_logit_err']:.4g}  "
+                  f"itemsize={r['kv_itemsize']:.3f}B")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

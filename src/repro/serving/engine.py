@@ -112,7 +112,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from contextlib import nullcontext
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -216,7 +216,17 @@ class ServingEngine:
                  admission: str = "fifo",
                  adaptive_decode_block: bool = False,
                  speculative: bool = False, draft_len: int = 4,
+                 quant: Optional[str] = None,
                  mesh=None):
+        # Quantized serving (DESIGN.md §14): ``quant=`` overrides the
+        # config's QuantMode for this engine — the plan, kernel choices,
+        # and paged pool dtypes all key off ``cfg.quant`` downstream.
+        if quant is not None and quant != cfg.quant:
+            cfg = replace(cfg, quant=quant)
+        if cfg.kv_quant and not paged:
+            raise ValueError("KV quantization requires the paged cache "
+                             "(per-page scale pools ride next to the "
+                             "page pools)")
         self.cfg = cfg
         self.mesh = mesh
         if admission not in ("fifo", "sjf", "prefix"):
@@ -333,8 +343,11 @@ class ServingEngine:
                 # non-bootstrap engine must not pay the no-op page
                 # gather/scatter on every decode dispatch.
                 if prefix_bootstrap:
+                    # Page-indexed leaves — K/V pools AND their per-page
+                    # scale rows — copy together (dim 1 is pages on
+                    # both); state rows are slot-indexed and skip.
                     def cow(path, leaf):
-                        if cache_leaf_kind(cache_leaf_name(path)) != "kv":
+                        if cache_leaf_kind(cache_leaf_name(path)) == "state":
                             return leaf
                         return leaf.at[:, cow_dst].set(leaf[:, cow_src])
 
@@ -391,7 +404,7 @@ class ServingEngine:
                 # slot's first append may land inside a shared page.
                 if prefix_bootstrap:
                     def cow(path, leaf):
-                        if cache_leaf_kind(cache_leaf_name(path)) != "kv":
+                        if cache_leaf_kind(cache_leaf_name(path)) == "state":
                             return leaf
                         return leaf.at[:, cow_dst].set(leaf[:, cow_src])
 
@@ -463,7 +476,7 @@ class ServingEngine:
         self.kv_bytes_reserved = sum(
             leaf.nbytes for path, leaf in
             jax.tree_util.tree_flatten_with_path(self._slot_cache)[0]
-            if cache_leaf_kind(cache_leaf_name(path)) == "kv")
+            if cache_leaf_kind(cache_leaf_name(path)) in ("kv", "scale"))
         self.metrics: Dict[str, float] = {
             "dispatches": 0, "ticks": 0, "scan_ticks": 0, "generated": 0,
             "prefills": 0, "prefill_chunks": 0, "rejected": 0,
@@ -476,6 +489,10 @@ class ServingEngine:
             "kv_bytes_reserved": self.kv_bytes_reserved,
             "kv_bytes_peak": 0,
             "kv_bytes_cached": 0,
+            "quant": cfg.quant,
+            "kv_itemsize_effective": (
+                self.kv.kv_itemsize_effective if self.kv is not None
+                else (2.0 if cfg.dtype == "bfloat16" else 4.0)),
             "sched_budget": 0,
             "sharded": int(mesh is not None),
             "kv_shards": self.kv.kv_shards if self.kv else 1,

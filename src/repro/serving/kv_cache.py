@@ -83,6 +83,62 @@ def from_page_major(seq: jax.Array, layout: str) -> jax.Array:
     return seq
 
 
+# --------------------------------------------------------------------- #
+# KV quantization (DESIGN.md §14)
+# --------------------------------------------------------------------- #
+#
+# Quantized pools store CODES: ``value ≈ code * scale`` with one f32 scale
+# per (physical page, kv head) riding in a scale pool ``[G, num_pages,
+# Hkv]`` next to each value pool.  Scales are per-page so the paged
+# kernels can fetch them through the same scalar-prefetch page-table
+# indirection as the pages themselves, and per-kv-head because head norms
+# differ by orders of magnitude while positions within a page do not.
+
+def kv_quant_dtype(kind: Optional[str]):
+    """Pool storage dtype for a ``ModelConfig.kv_quant`` kind."""
+    if kind is None:
+        return None
+    if kind == "int8":
+        return jnp.int8
+    if kind == "fp8":
+        return jnp.float8_e4m3fn
+    raise ValueError(f"unknown kv quant kind {kind!r}")
+
+
+def kv_quant_qmax(dtype) -> float:
+    """Largest representable code magnitude (amax maps onto it)."""
+    if jnp.dtype(dtype) == jnp.int8:
+        return 127.0
+    return 448.0          # float8_e4m3fn finite max
+
+
+def quantize_kv(x: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Encode values as codes at ``scale`` (broadcastable): int8 rounds
+    and saturates; fp8 stores ``value / scale`` directly (the e4m3 cast
+    rounds).  A zero scale (all-zero page) encodes zeros."""
+    qmax = kv_quant_qmax(dtype)
+    v = jnp.where(scale > 0, x.astype(jnp.float32)
+                  / jnp.maximum(scale, 1e-30), 0.0)
+    v = jnp.clip(v, -qmax, qmax)
+    if jnp.dtype(dtype) == jnp.int8:
+        return jnp.round(v).astype(jnp.int8)
+    return v.astype(dtype)
+
+
+def _requant_codes(codes: jax.Array, old_scale: jax.Array,
+                   new_scale: jax.Array) -> jax.Array:
+    """Re-encode existing page codes after their scale grew (monotone
+    scale update): ``code * old / new``.  When the scale is unchanged the
+    ratio is exactly 1.0 and the round-trip is the identity, so steady
+    appends never drift a page's earlier rows."""
+    ratio = jnp.where(new_scale > 0,
+                      old_scale / jnp.maximum(new_scale, 1e-30), 0.0)
+    v = codes.astype(jnp.float32) * ratio
+    if jnp.dtype(codes.dtype) == jnp.int8:
+        return jnp.round(v).astype(jnp.int8)
+    return v.astype(codes.dtype)
+
+
 def cow_copy_pool(pool: jax.Array, src: jax.Array,
                   dst: jax.Array) -> jax.Array:
     """Copy physical page(s) ``src`` onto ``dst`` inside a pool.
@@ -137,6 +193,56 @@ def paged_append(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
     return pool.at[phys, posc % page_size].set(tok.astype(pool.dtype))
 
 
+def _append_row_q(pool: jax.Array, scale: jax.Array,
+                  page_table: jax.Array, pos: jax.Array,
+                  tok: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize-on-write core: one page-major token row per slot.
+
+    pool: [P, page_size, H, hd] codes; scale: [P, H] f32; tok: [B, H, hd]
+    full-precision.  Per-page scales are MONOTONE non-decreasing: the new
+    scale is ``max(old, amax(tok)/qmax)``, and when it grows the page's
+    existing rows are re-encoded at the new scale in the same scatter
+    (error ~1 code LSB — bounded by the round-trip tests).  NULL routing
+    matches ``paged_append``: out-of-range positions write the
+    sacrificial page's codes and scale, which nothing dequantizes.
+    """
+    page_size = pool.shape[1]
+    b = page_table.shape[0]
+    extent = page_table.shape[1] * page_size
+    in_range = jnp.logical_and(pos >= 0, pos < extent)
+    posc = jnp.clip(pos, 0, extent - 1)
+    phys = jnp.where(in_range,
+                     page_table[jnp.arange(b), posc // page_size],
+                     NULL_PAGE)                            # [B]
+    qmax = kv_quant_qmax(pool.dtype)
+    amax = jnp.max(jnp.abs(tok.astype(jnp.float32)), axis=-1)   # [B, H]
+    old = scale[phys]                                           # [B, H]
+    new = jnp.maximum(old, amax / qmax)
+    page = _requant_codes(pool[phys], old[:, None, :, None],
+                          new[:, None, :, None])     # [B, ps, H, hd]
+    row = quantize_kv(tok, new[..., None], pool.dtype)
+    pool = pool.at[phys].set(page)
+    pool = pool.at[phys, posc % page_size].set(row)
+    return pool, scale.at[phys].set(new)
+
+
+def paged_append_q(pool: jax.Array, scale: jax.Array,
+                   page_table: jax.Array, pos: jax.Array, new: jax.Array,
+                   *, layout: str,
+                   cow_src: Optional[jax.Array] = None,
+                   cow_dst: Optional[jax.Array] = None,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized twin of ``paged_append``: scatter one decode token per
+    slot as codes and fold its magnitude into the page's scale.  Returns
+    ``(pool, scale)``.  The COW copy duplicates the scale row alongside
+    the value page — the two pools move in lockstep by construction."""
+    if cow_src is not None:
+        pool = cow_copy_pool(pool, cow_src, cow_dst)
+        scale = cow_copy_pool(scale, cow_src, cow_dst)
+    tok = to_page_major(new, layout)[:, 0]                 # [B, H, hd]
+    return _append_row_q(pool, scale, page_table, pos, tok)
+
+
 def paged_append_window(pool: jax.Array, page_table: jax.Array,
                         pos: jax.Array, new: jax.Array, *, layout: str,
                         cow_src: Optional[jax.Array] = None,
@@ -174,6 +280,65 @@ def paged_append_window(pool: jax.Array, page_table: jax.Array,
         page_table[jnp.arange(b)[:, None], pc // page_size],
         NULL_PAGE)                                         # [B, W]
     return pool.at[phys, pc % page_size].set(win.astype(pool.dtype))
+
+
+def paged_append_window_q(pool: jax.Array, scale: jax.Array,
+                          page_table: jax.Array, pos: jax.Array,
+                          new: jax.Array, *, layout: str,
+                          cow_src: Optional[jax.Array] = None,
+                          cow_dst: Optional[jax.Array] = None,
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized twin of ``paged_append_window``: the W verify rows are
+    appended sequentially through the single-row quantize-on-write core
+    (W is small and static), so a window that grows its page's scale
+    re-encodes earlier rows exactly as single-token decode would."""
+    if cow_src is not None:
+        pool = cow_copy_pool(pool, cow_src, cow_dst)
+        scale = cow_copy_pool(scale, cow_src, cow_dst)
+    win = to_page_major(new, layout)                       # [B, W, H, hd]
+    for i in range(win.shape[1]):
+        pool, scale = _append_row_q(pool, scale, page_table, pos + i,
+                                    win[:, i])
+    return pool, scale
+
+
+def place_chunk_pages_q(pool: jax.Array, scale: jax.Array, seq: jax.Array,
+                        chunk_pages: jax.Array, *, layout: str,
+                        cow_src: Optional[jax.Array] = None,
+                        cow_dst: Optional[jax.Array] = None,
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized twin of ``place_chunk_pages``: whole pages are encoded at
+    scales computed from their own content (``amax/qmax`` per page per kv
+    head) — chunk placement always overwrites whole pages, so the scale
+    is SET, not folded; later decode appends into a partial last page go
+    through the monotone ``paged_append_q`` update."""
+    page_size = pool.shape[1]
+    if cow_src is not None:
+        pool = cow_copy_pool(pool, cow_src, cow_dst)
+        scale = cow_copy_pool(scale, cow_src, cow_dst)
+    x = to_page_major(seq, layout)[0]                      # [C, H, hd]
+    c, h, hd = x.shape
+    chunks = x.reshape(c // page_size, page_size, h, hd)
+    qmax = kv_quant_qmax(pool.dtype)
+    amax = jnp.max(jnp.abs(chunks.astype(jnp.float32)),
+                   axis=(1, 3))                            # [n_cp, H]
+    new = amax / qmax
+    codes = quantize_kv(chunks, new[:, None, :, None], pool.dtype)
+    return (pool.at[chunk_pages].set(codes),
+            scale.at[chunk_pages].set(new))
+
+
+def gather_pages_dequant(pool: jax.Array, scale: jax.Array,
+                         page_table: jax.Array, *,
+                         layout: str) -> jax.Array:
+    """Quantized twin of ``gather_pages``: materialize dense f32 K/V by
+    dequantizing each gathered page with its per-(page, head) scale —
+    the eager reference the quantized Pallas kernels must match."""
+    pages = pool[page_table].astype(jnp.float32)  # [B, n, ps, H, hd]
+    s = scale[page_table]                         # [B, n, H]
+    pages = pages * s[:, :, None, :, None]
+    b, n, ps, h, hd = pages.shape
+    return from_page_major(pages.reshape(b, n * ps, h, hd), layout)
 
 
 def live_page_table(page_table: jax.Array, lengths, page_size: int
@@ -219,6 +384,13 @@ def place_prefill(cache: Tree, fresh: Tree, slot: jax.Array,
     are chunked into pages and scattered to the physical ``pages`` of this
     slot; state leaves replace the slot row.  Runs inside a donated jit —
     both scatters update in place.
+
+    Quantized pools carry ``*_scale`` siblings the fresh (full-precision)
+    prefill cache does not have, so the walk is over the parallel dict
+    structures rather than a ``tree_map``: each K/V leaf's pages are
+    encoded at their own per-(page, head) scales and the sibling scale
+    pool rows are written in the same pass (freshly ``ensure``d pages —
+    the scale is set, never folded).
     """
     page_size = None
     for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
@@ -226,20 +398,42 @@ def place_prefill(cache: Tree, fresh: Tree, slot: jax.Array,
             page_size = leaf.shape[2]
             break
 
-    def place(path, pool, small):
-        kind = cache_leaf_kind(cache_leaf_name(path))
-        if kind == "state":
-            return pool.at[:, slot].set(small[:, 0].astype(pool.dtype))
-        seq = to_page_major(small, layout)[:, 0]           # [G, S, H, hd]
-        g, s, h, hd = seq.shape
-        n = pages.shape[0]
-        pad = n * page_size - s
-        if pad:
-            seq = jnp.pad(seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        chunks = seq.reshape(g, n, page_size, h, hd)
-        return pool.at[:, pages].set(chunks.astype(pool.dtype))
+    def place_dict(cd: dict, fd: dict) -> dict:
+        out = dict(cd)
+        for name, small in fd.items():
+            kind = cache_leaf_kind(name)
+            pool = cd[name]
+            if kind == "state":
+                out[name] = pool.at[:, slot].set(
+                    small[:, 0].astype(pool.dtype))
+                continue
+            seq = to_page_major(small, layout)[:, 0]       # [G, S, H, hd]
+            g, s, h, hd = seq.shape
+            n = pages.shape[0]
+            pad = n * page_size - s
+            if pad:
+                seq = jnp.pad(seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            chunks = seq.reshape(g, n, page_size, h, hd)
+            sname = name + "_scale"
+            if sname in cd:
+                qmax = kv_quant_qmax(pool.dtype)
+                amax = jnp.max(jnp.abs(chunks.astype(jnp.float32)),
+                               axis=(2, 4))                # [G, n, H]
+                new = amax / qmax
+                codes = quantize_kv(chunks, new[:, :, None, :, None],
+                                    pool.dtype)
+                out[name] = pool.at[:, pages].set(codes)
+                out[sname] = cd[sname].at[:, pages].set(new)
+            else:
+                out[name] = pool.at[:, pages].set(chunks.astype(pool.dtype))
+        return out
 
-    return jax.tree_util.tree_map_with_path(place, cache, fresh)
+    return {
+        "blocks": tuple(place_dict(c, f) for c, f
+                        in zip(cache["blocks"], fresh["blocks"])),
+        "rest": tuple(place_dict(c, f) for c, f
+                      in zip(cache["rest"], fresh["rest"])),
+    }
 
 
 def place_chunk_pages(pool: jax.Array, seq: jax.Array,
@@ -308,21 +502,37 @@ def stage_chunk(prompt: np.ndarray, off: int, chunk: int,
 
 def paged_cache_defs(cfg: ModelConfig, slots: int, max_len: int,
                      page_size: int) -> Tree:
-    """Cache definition tree with K/V leaves replaced by page pools."""
+    """Cache definition tree with K/V leaves replaced by page pools.
+
+    Under a KV ``QuantMode`` each K/V pool stores int8 / fp8 codes and
+    gains a sibling ``<name>_scale`` leaf ``[G, num_pages, Hkv]`` f32 —
+    one scale per (physical page, kv head), indexed by the same page ids
+    as the pool (DESIGN.md §14).
+    """
     num_pages = 1 + slots * cdiv(max_len, page_size)       # +1: NULL page
     hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+    qdtype = kv_quant_dtype(cfg.kv_quant)
 
-    def to_pool(path, cd):
-        if cache_leaf_kind(cache_leaf_name(path)) == "state":
-            return cd
-        groups = cd.shape[0]
-        return CacheDef((groups, num_pages, page_size, hkv, hd),
-                        ("layers", "kv_pages", None, "kv_heads", None),
-                        cd.dtype)
+    def group_defs(defs: dict) -> dict:
+        out = {}
+        for name, cd in defs.items():
+            if cache_leaf_kind(name) == "state":
+                out[name] = cd
+                continue
+            groups = cd.shape[0]
+            out[name] = CacheDef(
+                (groups, num_pages, page_size, hkv, hd),
+                ("layers", "kv_pages", None, "kv_heads", None),
+                qdtype if qdtype is not None else cd.dtype)
+            if qdtype is not None:
+                out[name + "_scale"] = CacheDef(
+                    (groups, num_pages, hkv),
+                    ("layers", "kv_pages", "kv_heads"), jnp.float32)
+        return out
 
-    return jax.tree_util.tree_map_with_path(
-        to_pool, cache_defs(cfg, slots, max_len),
-        is_leaf=lambda x: isinstance(x, CacheDef))
+    base = cache_defs(cfg, slots, max_len)
+    return {"blocks": tuple(group_defs(d) for d in base["blocks"]),
+            "rest": tuple(group_defs(d) for d in base["rest"])}
 
 
 class PagedKVCache:
@@ -383,7 +593,11 @@ class PagedKVCache:
             from ..distributed.sharding import spec_for
 
             def leaf_sharding(path, cd):
-                if cache_leaf_kind(cache_leaf_name(path)) != "kv":
+                # Scale pools shard alongside their value pools (both
+                # carry a ``kv_heads`` logical axis); state stays
+                # replicated.
+                if cache_leaf_kind(cache_leaf_name(path)) \
+                        not in ("kv", "scale"):
                     return NamedSharding(mesh, P())
                 return NamedSharding(
                     mesh, spec_for(cfg, cd.axes, cd.shape, mesh))
@@ -402,15 +616,25 @@ class PagedKVCache:
                 if claims_model(s.spec):
                     self.kv_shards = int(mesh.shape["model"])
                     break
-        # Bytes of ONE physical page summed over every K/V pool leaf (all
-        # layer groups) — the unit of the bytes-in-use accounting.
+        # Bytes of ONE physical page summed over every page-indexed pool
+        # leaf (all layer groups) — the unit of the bytes-in-use
+        # accounting.  Computed from each pool's ACTUAL dtype, not an
+        # assumed uniform compute dtype: quantized value pools count at
+        # the int8/fp8 itemsize and the f32 scale pools count too, so
+        # ``bytes_in_use``/``peak_bytes_per_shard`` report physical truth
+        # across quant modes.  Every leaf with a ``kv_pages`` axis (dim 1)
+        # contributes ``elems / num_pages * itemsize``.
         self.page_bytes = 0
+        self._kv_elems_per_page = 0
         for path, cd in jax.tree_util.tree_flatten_with_path(
                 self._defs, is_leaf=lambda x: isinstance(x, CacheDef))[0]:
-            if cache_leaf_kind(cache_leaf_name(path)) == "kv":
-                g, _, ps, h, hd = cd.shape
-                self.page_bytes += (g * ps * h * hd
-                                    * jnp.dtype(cd.dtype).itemsize)
+            kind = cache_leaf_kind(cache_leaf_name(path))
+            if kind not in ("kv", "scale"):
+                continue
+            per_page = int(np.prod(cd.shape)) // cd.shape[1]
+            self.page_bytes += per_page * jnp.dtype(cd.dtype).itemsize
+            if kind == "kv":
+                self._kv_elems_per_page += per_page
         self._table = np.zeros((slots, self.pages_per_slot), np.int32)
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
         self._owned: List[List[int]] = [[] for _ in range(slots)]
@@ -492,6 +716,14 @@ class PagedKVCache:
         """Per-device peak K/V bytes: the pools split over ``kv_shards``
         (the 'model' factor the kv_heads dim actually claimed)."""
         return self.peak_bytes_in_use // self.kv_shards
+
+    @property
+    def kv_itemsize_effective(self) -> float:
+        """Stored bytes per K/V element, scale-pool overhead amortized in
+        (e.g. bf16 -> 2.0; int8 with per-page-per-head f32 scales ->
+        slightly above 1.0).  Self-describing unit for cross-quant-mode
+        bytes comparisons in the metrics and benchmarks."""
+        return self.page_bytes / self._kv_elems_per_page
 
     def slot_pages(self, slot: int) -> np.ndarray:
         return np.asarray(self._owned[slot], np.int32)
@@ -646,14 +878,25 @@ class PagedKVCache:
         self._table[slot, :] = NULL_PAGE
 
     # ------------------------------------------------------- invariants
-    def assert_page_accounting(self) -> None:
+    def assert_page_accounting(self, cache: Optional[Tree] = None) -> None:
         """Free-list / refcount / tree partition invariant (used by the
         churn tests and the engine's debug hooks).
 
         Every physical page (except NULL) is in exactly one state:
         free, referenced (refs > 0), or cached (tree-owned at refs 0);
         the free list holds no duplicates and nothing referenced or
-        tree-owned; refcounts equal actual slot-table occupancy."""
+        tree-owned; refcounts equal actual slot-table occupancy.
+
+        Under a KV quant mode, additionally cross-checks that the value
+        and scale pools stay in LOCKSTEP: every K/V leaf has a
+        ``<name>_scale`` sibling indexed by the same physical page axis
+        (``[G, num_pages, Hkv]`` f32) — and, when the live device
+        ``cache`` tree is passed, that its leaves match the definitions.
+        Since every page mutation (append, chunk placement, COW copy,
+        prefill placement) goes through paired pool+scale primitives
+        addressed by one shared page id, shape lockstep plus the single
+        allocator are what make a value page and its scale row move
+        together."""
         free = list(self._free)
         free_set = set(free)
         assert len(free) == len(free_set), "free list holds duplicates"
@@ -677,3 +920,34 @@ class PagedKVCache:
         for slot, owned in enumerate(self._owned):
             assert list(self._table[slot, :len(owned)]) == owned
             assert np.all(self._table[slot, len(owned):] == NULL_PAGE)
+        # Value/scale pool lockstep (DESIGN.md §14).
+        quant = self.cfg.kv_quant is not None
+        for group in self._defs["blocks"] + self._defs["rest"]:
+            for name, cd in group.items():
+                if cache_leaf_kind(name) != "kv":
+                    continue
+                sname = name + "_scale"
+                if not quant:
+                    assert sname not in group, \
+                        f"unexpected scale pool {sname} without kv quant"
+                    continue
+                assert sname in group, f"missing scale pool {sname}"
+                scd = group[sname]
+                assert scd.shape == (cd.shape[0], cd.shape[1],
+                                     cd.shape[3]), \
+                    (f"{sname} shape {scd.shape} out of lockstep with "
+                     f"{name} {cd.shape}")
+                assert jnp.dtype(scd.dtype) == jnp.float32
+                assert jnp.dtype(cd.dtype) == jnp.dtype(
+                    kv_quant_dtype(self.cfg.kv_quant))
+        if cache is not None:
+            flat_c = jax.tree_util.tree_flatten_with_path(cache)[0]
+            flat_d = jax.tree_util.tree_flatten_with_path(
+                self._defs, is_leaf=lambda x: isinstance(x, CacheDef))[0]
+            assert len(flat_c) == len(flat_d), \
+                "device cache structure out of lockstep with definitions"
+            for (pc, leaf), (pd, cd) in zip(flat_c, flat_d):
+                assert pc == pd and leaf.shape == cd.shape \
+                    and jnp.dtype(leaf.dtype) == jnp.dtype(cd.dtype), \
+                    (f"device leaf {pc} {leaf.shape}/{leaf.dtype} vs def "
+                     f"{pd} {cd.shape}/{cd.dtype}")
