@@ -366,8 +366,14 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
         "arch": base.name, "batch": batch, "seq": seq,
         "new_tokens": new_tokens, "decode_block": decode_block,
     }
-    plan = resolve_plan(dataclasses.replace(base, use_fused_kernels=True),
-                        batch * seq)
+    fused_cfg = dataclasses.replace(base, use_fused_kernels=True)
+    plan = resolve_plan(fused_cfg, batch * seq)
+    # Static verification (DESIGN.md §15): BENCH_fused.json records
+    # whether the plan it benchmarked passed the stream verifier.
+    from repro.analysis import errors as _diag_errors, verify_plan
+    diags = verify_plan(plan, fused_cfg)
+    plan = plan.with_verification(not _diag_errors(diags),
+                                  tuple(str(d) for d in diags))
     result["plan"] = plan.summary()
 
     losses = {}

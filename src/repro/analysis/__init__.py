@@ -1,0 +1,22 @@
+"""Static stream verifier (DESIGN.md §15).
+
+itensor-typed analysis of a ``StreamPlan`` + config + mesh that checks
+fusion legality, kernel block/VMEM budgets, sharding-claim coherence and
+the serving path's paged-memory/donation invariants — all without
+tracing a kernel or touching a device.
+"""
+
+from .diagnostics import (Diagnostic, PlanVerificationError, clean, errors,
+                          warnings_)
+from .effects import check_effects
+from .itensor_check import check_itensors, stage_itensor, stage_itensors
+from .kernel_lint import check_kernels, vmem_estimate
+from .sharding_check import check_sharding
+from .verify import verify_or_raise, verify_plan
+
+__all__ = [
+    "Diagnostic", "PlanVerificationError", "clean", "errors", "warnings_",
+    "check_effects", "check_itensors", "check_kernels", "check_sharding",
+    "stage_itensor", "stage_itensors", "verify_or_raise", "verify_plan",
+    "vmem_estimate",
+]

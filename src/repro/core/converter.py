@@ -124,6 +124,32 @@ def conversion_cost_bytes(src: ITensorType, res: ITensorType) -> float:
     return 0.0 if spec is None else spec.pingpong_bytes
 
 
+def fusion_verdict(src: ITensorType, res: ITensorType) -> str:
+    """Classify producer -> consumer stream compatibility WITHOUT building
+    a converter — the static-analysis query (analysis/itensor_check.py).
+
+    Returns one of:
+      * ``"match"``        — types equivalent; a raw FIFO fuses them.
+      * ``"converter"``    — a bounded ping-pong window re-orders the
+        stream (some loop prefix is shared, so at least one data dim
+        buffers at element granularity).
+      * ``"rebuffer"``     — no shared prefix covers any data dim: the
+        converter degenerates to a full-tensor buffer, i.e. the "fusion"
+        silently materializes the whole intermediate.
+      * ``"incompatible"`` — different data space or dtype; no converter
+        exists (``infer_converter`` would raise).
+    """
+    if src.dtype != res.dtype or src.data_shape != res.data_shape:
+        return "incompatible"
+    if src.canonicalize() == res.canonicalize():
+        return "match"
+    m = shared_prefix_length(src, res)
+    results = src.iter_map.results
+    if all(results[j] >= m for j in range(src.rank)):
+        return "rebuffer"      # every data dim buffered at full extent
+    return "converter"
+
+
 # --------------------------------------------------------------------- #
 # Reference / verification machinery
 # --------------------------------------------------------------------- #

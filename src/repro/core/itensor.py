@@ -37,15 +37,31 @@ from .affine import AffineMap, lexicographic_indices
 _DTYPE_BYTES = {
     "float32": 4, "f32": 4, "bfloat16": 2, "bf16": 2, "float16": 2, "f16": 2,
     "int32": 4, "i32": 4, "int8": 1, "i8": 1, "uint8": 1, "u8": 1,
-    "int4": 0.5, "i4": 0.5, "float8_e4m3fn": 1, "f8": 1,
+    # Sub-byte packings are exact fractions, matching the paged cache's
+    # ``kv_itemsize_effective`` (= pool bytes / logical elements).
+    "int4": 0.5, "i4": 0.5, "uint4": 0.5, "u4": 0.5,
+    # Both fp8 encodings the quantized KV pools may carry (DESIGN.md §14).
+    "float8_e4m3fn": 1, "float8_e4m3": 1, "f8_e4m3": 1, "f8": 1,
+    "float8_e5m2": 1, "f8_e5m2": 1, "e5m2": 1,
 }
 
 
 def dtype_bytes(dtype: str) -> float:
+    """Bytes per element for an itensor dtype string.
+
+    Exact (possibly fractional) for the table above; falls back to numpy
+    for anything else.  ``np.dtype`` does not know jax's extended dtypes
+    (bfloat16, fp8) — those must come from the table, so the fallback
+    failure is rewritten into a diagnosable error naming the dtype.
+    """
     try:
         return _DTYPE_BYTES[dtype]
     except KeyError:
+        pass
+    try:
         return np.dtype(dtype).itemsize
+    except TypeError as e:
+        raise ValueError(f"unknown itensor dtype {dtype!r}") from e
 
 
 @dataclass(frozen=True)

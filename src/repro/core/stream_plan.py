@@ -94,8 +94,23 @@ class KernelChoice:
             d["shard"] = self.sharding
         return d
 
+    def block(self, name: str, default: int = 0) -> int:
+        """One named block-size target (``0``/default when absent) — the
+        static-analysis accessor (analysis/ reconstructs itensor types
+        from these without consulting the wrappers)."""
+        return int(dict(self.blocks).get(name, default))
+
+    def claim(self, dim: str):
+        """Mesh axis (or axis group) claimed for ``dim``; None when the
+        dim is unclaimed (replicated)."""
+        return dict(self.sharding).get(dim)
+
 
 EAGER = KernelChoice("eager")
+
+# Stage slots every LayerPlan carries, in pipeline order — the order the
+# itensor pass walks producer/consumer pairs in.
+STAGES = ("qkv", "attention", "decode_attn", "verify_attn", "ffn", "mixer")
 
 
 @dataclass(frozen=True)
@@ -115,6 +130,11 @@ class LayerPlan:
                    (self.qkv, self.attention, self.decode_attn,
                     self.verify_attn, self.ffn, self.mixer))
 
+    def stages(self):
+        """Yield ``(stage_name, KernelChoice)`` in pipeline order."""
+        for name in STAGES:
+            yield name, getattr(self, name)
+
 
 @dataclass(frozen=True)
 class StreamPlan:
@@ -132,6 +152,10 @@ class StreamPlan:
     fusion_groups: int = 0
     implementations: Tuple[str, ...] = ()
     mesh_axes: Tuple[Tuple[str, int], ...] = ()   # mesh the plan targets
+    # Static-verification record (analysis/verify.py): None = never
+    # verified; the engine attaches the result via ``with_verification``.
+    verified: Optional[bool] = None
+    diagnostics: Tuple[str, ...] = ()
 
     def layer(self, kind: str) -> LayerPlan:
         for k, lp in self.layers:
@@ -176,6 +200,22 @@ class StreamPlan:
         ps = max(1, int(page_size))
         return max(1, -(-int(base) // ps)) * ps
 
+    def stage_choices(self):
+        """Yield every stage's ``(owner, stage_name, KernelChoice)`` —
+        layer stages plus the LM head — the iteration surface the
+        analysis passes walk (``owner`` is the layer kind, or "final")."""
+        for kind, lp in self.layers:
+            for stage, choice in lp.stages():
+                yield kind, stage, choice
+        yield "final", "lm_head", self.lm_head
+
+    def with_verification(self, verified: bool,
+                          diagnostics: Tuple[str, ...]) -> "StreamPlan":
+        """Copy of the plan carrying a verification verdict (the engine
+        attaches this after running ``analysis.verify_plan``)."""
+        return replace(self, verified=bool(verified),
+                       diagnostics=tuple(diagnostics))
+
     def summary(self) -> Dict[str, object]:
         return {
             "arch": self.arch,
@@ -205,6 +245,8 @@ class StreamPlan:
             },
             "lm_head": self.lm_head.implementation,
             "lm_head_sharding": dict(self.lm_head.sharding),
+            "verified": self.verified,
+            "diagnostics": list(self.diagnostics),
         }
 
 

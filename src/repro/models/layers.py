@@ -47,6 +47,95 @@ def reset_dispatch_records() -> None:
     DISPATCH_RECORDS["single"] = 0
 
 
+# --------------------------------------------------------------------- #
+# Dispatch effect signatures (static analysis, DESIGN.md §15)
+# --------------------------------------------------------------------- #
+# Declarative read/write effects of the serving engine's jitted
+# dispatches over their DONATED buffers — the facts the alias & donation
+# checker (analysis/effects.py) verifies without tracing anything.  One
+# entry per compiled dispatch; ops appear in program order.  Op fields:
+#
+#   reads          — buffers read wherever they currently are (in-place
+#                    scatter/gather semantics; safe after earlier writes).
+#   reads_initial  — buffers whose PRE-DISPATCH state the op needs; a
+#                    read-after-write on a donated buffer here is a bug.
+#   writes         — buffers the op updates in place (donation makes
+#                    these true aliases of the caller's arrays).
+#   page_indexed   — the write scatters through the page table; such
+#                    ops MUST set null_routed (masked writes land on the
+#                    sacrificial NULL page, kv_cache.NULL_PAGE) and,
+#                    under a KV QuantMode, updates_scales (the per-page
+#                    scale twin updates in lockstep with the codes).
+#   cow            — copy-on-write step: duplicates pool page ``src``
+#                    onto ``dst`` before any scatter.  ``fresh_dst``
+#                    declares the allocator invariant that dst is a
+#                    freshly-allocated private page (never aliasing src
+#                    unless both are NULL) — without it a shared page
+#                    could be overwritten in place.
+#
+# The declarations mirror serving/engine.py (_prefill / _decode /
+# _verify / _prefill_chunk) and models/model.py; keep them in sync when
+# a dispatch gains an operand.
+DISPATCH_EFFECTS: Dict[str, Dict[str, Any]] = {
+    "prefill": {
+        "donated": ("slot_cache",),
+        "ops": (
+            {"name": "model_prefill", "reads": ("params", "tokens"),
+             "writes": ("fresh",)},
+            {"name": "place_prefill", "reads": ("fresh", "pages"),
+             "writes": ("slot_cache",), "page_indexed": True,
+             "null_routed": True, "updates_scales": True},
+        ),
+    },
+    "prefill_chunk": {
+        "donated": ("slot_cache",),
+        "ops": (
+            {"name": "cow_copy",
+             "reads_initial": ("slot_cache",), "writes": ("slot_cache",),
+             "page_indexed": True, "null_routed": True,
+             "updates_scales": True,
+             "cow": {"src": "cow_src", "dst": "cow_dst",
+                     "fresh_dst": True}},
+            {"name": "chunk_scatter",
+             "reads": ("params", "tokens", "table_row", "chunk_pages",
+                       "slot_cache"),
+             "writes": ("slot_cache",), "page_indexed": True,
+             "null_routed": True, "updates_scales": True},
+        ),
+    },
+    "decode": {
+        "donated": ("cache",),
+        "ops": (
+            {"name": "cow_copy",
+             "reads_initial": ("cache",), "writes": ("cache",),
+             "page_indexed": True, "null_routed": True,
+             "updates_scales": True,
+             "cow": {"src": "cow_src", "dst": "cow_dst",
+                     "fresh_dst": True}},
+            {"name": "decode_scan",
+             "reads": ("params", "tok", "cache", "table"),
+             "writes": ("cache",), "page_indexed": True,
+             "null_routed": True, "updates_scales": True},
+        ),
+    },
+    "verify": {
+        "donated": ("cache",),
+        "ops": (
+            {"name": "cow_copy",
+             "reads_initial": ("cache",), "writes": ("cache",),
+             "page_indexed": True, "null_routed": True,
+             "updates_scales": True,
+             "cow": {"src": "cow_src", "dst": "cow_dst",
+                     "fresh_dst": True}},
+            {"name": "verify_window",
+             "reads": ("params", "toks", "cache", "table"),
+             "writes": ("cache",), "page_indexed": True,
+             "null_routed": True, "updates_scales": True},
+        ),
+    },
+}
+
+
 def _shard_mesh(shard):
     """The active mesh for a plan sharding claim (None = single-device).
 

@@ -109,7 +109,9 @@ host counter), the compile-storm signal this engine exists to flatten.
 
 from __future__ import annotations
 
+import os
 import time
+import warnings as _warnings
 from collections import deque
 from contextlib import nullcontext
 from dataclasses import dataclass, field, replace
@@ -217,6 +219,7 @@ class ServingEngine:
                  adaptive_decode_block: bool = False,
                  speculative: bool = False, draft_len: int = 4,
                  quant: Optional[str] = None,
+                 verify: Optional[str] = None,
                  mesh=None):
         # Quantized serving (DESIGN.md §14): ``quant=`` overrides the
         # config's QuantMode for this engine — the plan, kernel choices,
@@ -268,6 +271,36 @@ class ServingEngine:
             # tile its paged-attention choice carries); 16 when eager.
             page_size = (plan.decode_page_size(16) if plan is not None
                          else 16)
+
+        # Static verification (DESIGN.md §15): run the stream verifier
+        # over the resolved plan + pool schema + dispatch effect
+        # signatures BEFORE anything is traced.  strict (default) refuses
+        # to build an engine whose plan carries error diagnostics; warn
+        # reports and proceeds; off skips.  The plan records the outcome
+        # (``summary()["verified"]``/``["diagnostics"]``).
+        vmode = (verify if verify is not None
+                 else os.environ.get("REPRO_VERIFY", "strict"))
+        if vmode not in ("strict", "warn", "off"):
+            raise ValueError(f"unknown verify mode {vmode!r} "
+                             "(strict | warn | off)")
+        self.verify_mode = vmode
+        if vmode != "off" and plan is not None:
+            from ..analysis import (PlanVerificationError, errors as
+                                    _diag_errors, verify_plan)
+            diags = verify_plan(
+                plan, cfg, mesh=mesh,
+                slots=batch_slots if paged else None,
+                max_len=max_len if paged else None,
+                page_size=min(page_size, max_len) if paged else None)
+            errs = _diag_errors(diags)
+            plan = plan.with_verification(
+                not errs, tuple(str(d) for d in diags))
+            self.plan = plan
+            if errs:
+                if vmode == "strict":
+                    raise PlanVerificationError(diags)
+                _warnings.warn("StreamPlan failed static verification: "
+                               + "; ".join(str(d) for d in errs))
 
         if chunked is None:
             chunked = paged and supports_chunked_prefill(cfg)
@@ -490,6 +523,8 @@ class ServingEngine:
             "kv_bytes_peak": 0,
             "kv_bytes_cached": 0,
             "quant": cfg.quant,
+            "verified": int(bool(self.plan.verified))
+                        if self.plan is not None else 0,
             "kv_itemsize_effective": (
                 self.kv.kv_itemsize_effective if self.kv is not None
                 else (2.0 if cfg.dtype == "bfloat16" else 4.0)),

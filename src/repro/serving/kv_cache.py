@@ -57,6 +57,24 @@ Tree = Any
 NULL_PAGE = 0       # physical page reserved as the write sink for
 #                     unallocated table entries / inactive slots
 
+# Paged-memory invariants the static analyzer (analysis/effects.py)
+# checks the pool schema and dispatch effect signatures against — the
+# declarative twin of the runtime ``assert_page_accounting`` audit.
+POOL_INVARIANTS = {
+    # Every page-table-indexed scatter masks dead rows onto NULL_PAGE;
+    # page 0 is sacrificial and never allocated to a slot.
+    "null_page": NULL_PAGE,
+    # Under a KV QuantMode every value pool leaf ``<name>`` carries a
+    # sibling ``<name>_scale`` [G, num_pages, Hkv] f32 indexed by the
+    # SAME physical page ids; appends/COW/chunk placement update both in
+    # lockstep (scales grow monotonically so codes stay valid).
+    "scale_suffix": "_scale",
+    "scale_dtype": "float32",
+    # ``cow_page`` allocates the private dst page fresh (refs == 1,
+    # never the src unless both are NULL) before any divergent write.
+    "cow_fresh_dst": True,
+}
+
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
