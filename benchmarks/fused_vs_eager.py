@@ -343,6 +343,84 @@ def bench_speculative(base, params, *, max_len: int, decode_block: int,
     return out
 
 
+def bench_autotune(base, params, *, max_len: int, decode_block: int,
+                   new_tokens: int) -> Dict[str, Any]:
+    """Autotuned vs analytic serving (DESIGN.md §16).
+
+    Three engines over identical prompts: the analytic baseline, a COLD
+    autotuned start (tunes every fused stage, persists the table), and a
+    WARM start against the same table — which must perform zero
+    measurement dispatches and resolve a bit-identical plan.  Records
+    tuned-vs-analytic decode tokens/s and TTFT, the candidate/pruned/
+    measured counters, and the plan provenance.  Deviceless runs score
+    candidates with the analytic surrogate, so the deltas are noise —
+    the section's value there is exercising the whole tune/persist/
+    reload pipeline on every benchmark run.
+    """
+    import tempfile
+
+    from repro.core.stream_plan import plan_for
+
+    nprng = np.random.default_rng(47)
+    prompts = [nprng.integers(1, base.vocab_size, n, dtype=np.int32)
+               for n in (max_len // 2, max_len // 4)]
+
+    def serve(**engine_kw) -> Dict[str, Any]:
+        eng = ServingEngine(base, params, batch_slots=len(prompts),
+                            max_len=max_len, decode_block=decode_block,
+                            prefix_cache=False, **engine_kw)
+        eng.generate([p.copy() for p in prompts],
+                     max_new_tokens=2)               # absorb compiles
+        t0 = time.perf_counter()
+        reqs = eng.generate([p.copy() for p in prompts],
+                            max_new_tokens=new_tokens)
+        wall = time.perf_counter() - t0
+        generated = sum(len(r.out_tokens) for r in reqs)
+        return {
+            "engine": eng,
+            "tokens": [r.out_tokens for r in reqs],
+            "decode_tokens_per_s": generated / wall,
+            "ttft_s": float(np.nanmean([r.ttft_s for r in reqs])),
+        }
+
+    with tempfile.TemporaryDirectory(prefix="repro_tune_") as d:
+        plan_for.cache_clear()
+        analytic = serve()
+        plan_for.cache_clear()
+        cold = serve(autotune=d)
+        plan_for.cache_clear()
+        warm = serve(autotune=d)
+        e_cold, e_warm = cold["engine"], warm["engine"]
+        out: Dict[str, Any] = {
+            "analytic": {k: v for k, v in analytic.items()
+                         if k in ("decode_tokens_per_s", "ttft_s")},
+            "tuned_cold": {
+                "decode_tokens_per_s": cold["decode_tokens_per_s"],
+                "ttft_s": cold["ttft_s"],
+                "candidates": e_cold.tuner.stats.candidates,
+                "pruned_by_lint": e_cold.tuner.stats.pruned,
+                "measured": e_cold.tuner.stats.measured,
+                "stages_tuned": e_cold.tuner.stats.stages,
+                "table_entries": e_cold.metrics["tune_entries"],
+            },
+            "tuned_warm": {
+                "decode_tokens_per_s": warm["decode_tokens_per_s"],
+                "ttft_s": warm["ttft_s"],
+                "measured": e_warm.tuner.stats.measured,
+                "table_hits": e_warm.metrics["tune_hits"],
+            },
+            "plan_source": e_warm.metrics["plan_source"],
+            "plans_identical": e_cold.plan == e_warm.plan,
+            "tokens_equal_analytic":
+                cold["tokens"] == analytic["tokens"] == warm["tokens"],
+            "tuned_over_analytic_decode":
+                warm["decode_tokens_per_s"]
+                / max(analytic["decode_tokens_per_s"], 1e-9),
+        }
+    plan_for.cache_clear()       # drop tuned plans from the shared cache
+    return out
+
+
 def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     batch, seq = (2, 64) if quick else (2, 128)
     iters = 3 if quick else 7
@@ -487,6 +565,9 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     result["quantized"] = bench_quantized(
         base, params, max_len=max_len, decode_block=decode_block,
         new_tokens=new_tokens)
+    result["autotune"] = bench_autotune(
+        fused_cfg, params, max_len=max_len, decode_block=decode_block,
+        new_tokens=new_tokens)
     return result
 
 
@@ -566,6 +647,13 @@ def main(argv=None) -> int:
                 f"{q8['kv_itemsize_effective']:.2f}B, max|dlogit| "
                 f"{q8['max_logit_err']:.3g}, "
                 f"tokens_equal={q8['tokens_equal_f32']})")
+        at = r["autotune"]
+        tune_note = (
+            f"autotune x{at['tuned_over_analytic_decode']:.2f} decode "
+            f"({at['tuned_cold']['candidates']} cands, "
+            f"{at['tuned_cold']['pruned_by_lint']} pruned, warm "
+            f"measured={at['tuned_warm']['measured']}, "
+            f"identical={at['plans_identical']})")
         print(f"{r['arch']}: train {e['train_s']*1e3:.1f}ms eager / "
               f"{f['train_s']*1e3:.1f}ms fused | decode "
               f"{e['decode_tokens_per_s']:.1f} vs "
@@ -573,7 +661,7 @@ def main(argv=None) -> int:
               f"kv peak {dc['paged']['kv_bytes_peak']} paged / "
               f"{dc['contiguous']['kv_bytes_peak']} contiguous bytes | "
               f"{burst_note} | {prefix_note} | {spec_note} | "
-              f"{shard_note} | {quant_note} | "
+              f"{shard_note} | {quant_note} | {tune_note} | "
               f"loss diff {r['loss_abs_diff']:.2e}",
               flush=True)
 

@@ -23,7 +23,7 @@ from dataclasses import dataclass
 from typing import Iterable, List, Sequence
 
 SEVERITIES = ("error", "warning", "info")
-PASSES = ("itensor", "kernel", "sharding", "effects")
+PASSES = ("itensor", "kernel", "sharding", "effects", "tuning")
 
 
 @dataclass(frozen=True)

@@ -142,6 +142,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--full", action="store_true",
                     help="verify the full-size configs instead of the "
                          "reduced smoke variants (slower DSE)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="autotune every plan (in-memory hybrid table) "
+                         "before verifying — checks that measured-"
+                         "provenance plans also pass the verifier")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="also print info-level diagnostics")
     args = ap.parse_args(argv)
@@ -166,10 +170,13 @@ def main(argv: Optional[List[str]] = None) -> int:
             for nd in meshes:
                 mesh = _mesh_for(nd)
                 plan = build_stream_plan(cfg, tokens=args.tokens,
-                                         kv_len=args.kv_len, mesh=mesh)
+                                         kv_len=args.kv_len, mesh=mesh,
+                                         tune=args.tuned or None)
                 diags = verify_plan(plan, cfg, mesh,
                                     slots=args.slots, max_len=args.kv_len)
                 tag = f"{name:<16} quant={quant:<8} mesh={nd}"
+                if args.tuned:
+                    tag += " tuned"
                 if clean(diags):
                     infos = len(diags)
                     print(f"OK    {tag}  ({infos} info)")

@@ -22,7 +22,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from ..configs.base import ModelConfig
 from .allocation import AllocationResult, TPU_TIERS, allocate, buffers_from_plan
-from .dse import DSEResult, TrialResult, evaluate_trial, explore, modeled_latency_s
+from .dse import (CostSource, DSEResult, TrialResult, evaluate_trial,
+                  explore, modeled_latency_s)
 from .fifo_sizing import FifoPlan
 from .fusion import FusionPlan, fusion_memory_report
 from .graph import DataflowGraph
@@ -154,12 +155,17 @@ def compile_model(cfg: ModelConfig, *, tokens: int,
                   strategy: str = "normal",
                   default_tile_size: Optional[int] = None,
                   overall_unroll_size: Optional[int] = None,
+                  cost_source: Optional[CostSource] = None,
+                  seed_trials: Optional[Sequence[Tuple[int, int]]] = None,
                   ) -> CompiledDataflow:
     """Run the full StreamTensor pipeline on one block of ``cfg``.
 
     With explicit ``default_tile_size``/``overall_unroll_size`` the DSE is
     skipped (single trial) — used by tests and ablations; otherwise the
     blackbox explorer searches the tiling space with fusion feedback.
+    ``cost_source`` swaps the DSE's kernel-latency oracle (analytic |
+    measured | hybrid, see ``dse.CostSource``); ``seed_trials`` warm-start
+    the explorer deterministically.
     """
     stages: Dict[str, float] = {}
     t0 = time.perf_counter()
@@ -171,10 +177,12 @@ def compile_model(cfg: ModelConfig, *, tokens: int,
     if default_tile_size is not None:
         trial = evaluate_trial(ops, platform, default_tile_size,
                                overall_unroll_size or 64,
-                               strategy=strategy, keep_artifacts=True)
+                               strategy=strategy, keep_artifacts=True,
+                               cost_source=cost_source)
     else:
         trial = explore(ops, platform, budget=dse_budget,
-                        strategy=strategy).best
+                        strategy=strategy, cost_source=cost_source,
+                        seed_trials=seed_trials).best
     stages["dse+fusion+fifo"] = time.perf_counter() - t0
     assert trial.graph is not None and trial.fusion is not None
     assert trial.fifo is not None

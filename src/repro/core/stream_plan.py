@@ -77,10 +77,17 @@ Sharding = Tuple[Tuple[str, object], ...]
 @dataclass(frozen=True)
 class KernelChoice:
     """One stage's implementation + Pallas block-size targets + the mesh
-    axes its block grid shards over (empty = replicate / single-device)."""
+    axes its block grid shards over (empty = replicate / single-device).
+
+    ``source`` records the cost provenance of the block choice:
+    ``"analytic"`` when the blocks came from the DSE's modeled objective
+    (or an interpret-mode surrogate fill), ``"measured"`` when the
+    autotuner picked them from wall-clock kernel timings (DESIGN.md §16).
+    """
     implementation: str          # kernel name in repro.kernels, or "eager"
     blocks: Blocks = ()
     sharding: Sharding = ()
+    source: str = "analytic"     # "analytic" | "measured"
 
     @property
     def fused(self) -> bool:
@@ -156,6 +163,10 @@ class StreamPlan:
     # verified; the engine attaches the result via ``with_verification``.
     verified: Optional[bool] = None
     diagnostics: Tuple[str, ...] = ()
+    # Plan-level cost provenance (DESIGN.md §16): "analytic" (pure DSE),
+    # "measured" (every tuned stage scored by wall-clock measurement), or
+    # "hybrid" (tuned, with analytic fills — e.g. deviceless CI).
+    cost_source: str = "analytic"
 
     def layer(self, kind: str) -> LayerPlan:
         for k, lp in self.layers:
@@ -216,6 +227,23 @@ class StreamPlan:
         return replace(self, verified=bool(verified),
                        diagnostics=tuple(diagnostics))
 
+    def with_stage(self, owner: str, stage: str,
+                   choice: KernelChoice) -> "StreamPlan":
+        """Copy of the plan with ONE stage's choice replaced — the
+        autotuner's candidate-swap primitive (``owner`` is the layer
+        kind, or "final" for the LM head), addressing the same
+        (owner, stage) pairs ``stage_choices`` yields."""
+        if owner == "final" and stage == "lm_head":
+            return replace(self, lm_head=choice)
+        if stage not in STAGES:
+            raise ValueError(f"unknown stage {stage!r} (have {STAGES})")
+        if not any(k == owner for k, _ in self.layers):
+            raise ValueError(f"plan has no layer kind {owner!r}")
+        layers = tuple(
+            (k, replace(lp, **{stage: choice}) if k == owner else lp)
+            for k, lp in self.layers)
+        return replace(self, layers=layers)
+
     def summary(self) -> Dict[str, object]:
         return {
             "arch": self.arch,
@@ -247,6 +275,14 @@ class StreamPlan:
             "lm_head_sharding": dict(self.lm_head.sharding),
             "verified": self.verified,
             "diagnostics": list(self.diagnostics),
+            # Cost provenance (DESIGN.md §16): the plan-level source plus
+            # every stage whose blocks came from measurements.
+            "plan_source": self.cost_source,
+            "stage_sources": {
+                f"{kind}.{stage}": choice.source
+                for kind, stage, choice in self.stage_choices()
+                if choice.fused and choice.source != "analytic"
+            },
         }
 
 
@@ -511,7 +547,8 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
                       kv_len: Optional[int] = None,
                       platform: Platform = TPU_V5E,
                       dse_budget: int = 8,
-                      mesh=None) -> StreamPlan:
+                      mesh=None, tune=None, tune_table=None,
+                      cost_source=None) -> StreamPlan:
     """Run the StreamTensor pipeline over every distinct layer kind of
     ``cfg`` and collapse the result into an executable plan.
 
@@ -522,6 +559,13 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
     With ``mesh``, every stage additionally carries a sharding decision
     (see ``_mesh_claims``) and feature-dim block targets are clipped to
     the post-shard extents.
+
+    Autotuning (DESIGN.md §16): ``tune=`` is a ``tuning.Tuner`` (or
+    ``True`` for a fresh in-memory one) that rewrites the plan's
+    block/page/chunk choices from the measured-latency table after the
+    analytic build; ``tune_table=`` is a ``TuneTable`` or a path to one
+    (implies tuning).  ``cost_source=`` is a ``dse.CostSource`` plumbed
+    into the DSE objective itself (op-level measured makespan terms).
     """
     kinds: Dict[str, int] = {}
     for i in range(cfg.num_layers):
@@ -539,7 +583,8 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
             layer_index=idx,
             dse_budget=dse_budget if first else 1,
             default_tile_size=None if first else tile,
-            overall_unroll_size=None if first else unroll)
+            overall_unroll_size=None if first else unroll,
+            cost_source=cost_source)
         if first:
             tile = compiled.trial.params["default_tile_size"]
             unroll = compiled.trial.params["overall_unroll_size"]
@@ -555,7 +600,8 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
     # come from the head matmul's tiling decision.
     head_trial = evaluate_trial(trace_lm_head(cfg, tokens), platform,
                                 tile or LANE, unroll or 64,
-                                keep_artifacts=True)
+                                keep_artifacts=True,
+                                cost_source=cost_source)
     assert head_trial.graph is not None and head_trial.fusion is not None
     head_lowered = lower_groups(head_trial.graph, head_trial.fusion,
                                 partition(head_trial.graph, 1))
@@ -585,7 +631,7 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
         mesh_axes = tuple((str(a), int(mesh.shape[a]))
                           for a in mesh.axis_names)
 
-    return StreamPlan(
+    plan = StreamPlan(
         arch=cfg.name, tokens=tokens, kv_len=kv_len or tokens,
         platform=platform.name,
         default_tile_size=tile or LANE, overall_unroll_size=unroll or 64,
@@ -593,8 +639,28 @@ def build_stream_plan(cfg: ModelConfig, *, tokens: int,
         modeled_latency_s=latency, fusion_groups=groups,
         implementations=impls, mesh_axes=mesh_axes)
 
+    if (tune is not None and tune is not False) or tune_table is not None:
+        # Deliberately lazy: core must stay importable without the tuning
+        # package (which imports analysis, which imports core).
+        from ..tuning.autotune import Tuner, resolve_tuner
+        if isinstance(tune, Tuner):
+            tuner: Optional[Tuner] = tune
+        elif tune_table is not None:
+            tuner = resolve_tuner(tune_table, cfg)
+        else:
+            tuner = Tuner()         # in-memory, hybrid-fill
+        if tuner is not None:
+            plan = tuner.tune_plan(cfg, plan, mesh=mesh,
+                                   platform=platform)
+    return plan
+
 
 @functools.lru_cache(maxsize=64)
+def _plan_for_base(cfg: ModelConfig, tokens: int,
+                   kv_len: Optional[int] = None, mesh=None) -> StreamPlan:
+    return build_stream_plan(cfg, tokens=tokens, kv_len=kv_len, mesh=mesh)
+
+
 def plan_for(cfg: ModelConfig, tokens: int,
              kv_len: Optional[int] = None, mesh=None) -> StreamPlan:
     """Cached plan lookup used by the model entry points.
@@ -603,5 +669,21 @@ def plan_for(cfg: ModelConfig, tokens: int,
     KV length, and mesh (``jax.sharding.Mesh`` hashes by device grid +
     axis names) — the jitted callers re-trace per shape anyway, so plan
     granularity matches jit granularity.
+
+    When a ``tuning.Tuner`` is active (``ServingEngine(autotune=...)``
+    enters ``use_tuner`` around plan resolution and dispatch tracing,
+    exactly as meshes ride ``use_mesh``), the cached analytic plan is
+    post-processed through the tuner OUTSIDE the lru cache — a tuned
+    plan is memoized per-tuner, never served to untuned callers.
     """
-    return build_stream_plan(cfg, tokens=tokens, kv_len=kv_len, mesh=mesh)
+    plan = _plan_for_base(cfg, tokens, kv_len, mesh)
+    from ..tuning.autotune import active_tuner      # lazy: no core cycle
+    tuner = active_tuner()
+    if tuner is not None:
+        plan = tuner.tune_plan(cfg, plan, mesh=mesh)
+    return plan
+
+
+# Cache management passthrough (tests clear plan caches between configs).
+plan_for.cache_clear = _plan_for_base.cache_clear    # type: ignore[attr-defined]
+plan_for.cache_info = _plan_for_base.cache_info      # type: ignore[attr-defined]

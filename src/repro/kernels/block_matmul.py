@@ -20,6 +20,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import interpret_default, pick_block
 
+# Autotune candidate lattice (tuning/autotune.py) in KernelChoice
+# block names (block_t/block_n map onto this wrapper's block_m/
+# block_n); lint-illegal points are pruned before timing.
+TUNE_SPACE = {"block_t": (128, 256, 512), "block_n": (128, 256, 512)}
+
 
 def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(pl.program_id(2) == 0)

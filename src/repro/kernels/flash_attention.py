@@ -23,6 +23,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import interpret_default, pick_block
 
+# Autotune candidate lattice (tuning/autotune.py): query/KV stream
+# tile grid for the measured-latency tuner; lint-pruned pre-compile.
+TUNE_SPACE = {"block_q": (128, 256, 512), "block_kv": (128, 256, 512)}
+
 NEG_INF = -1e30
 
 

@@ -25,6 +25,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import interpret_default
 
+# Autotune candidate lattice (tuning/autotune.py): SSD chunk lengths
+# (the sequential-scan granule; larger chunks amortize the state
+# carry, smaller ones shrink the in-VMEM chunk working set).
+TUNE_SPACE = {"chunk": (64, 128, 256)}
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
                 state_ref, *, n_chunks: int, chunk: int):

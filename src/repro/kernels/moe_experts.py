@@ -21,6 +21,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import interpret_default, pick_block
 
+# Autotune candidate lattice (tuning/autotune.py): the expert grid is
+# fixed by the config, so only the token tile is searched.
+TUNE_SPACE = {"block_t": (128, 256, 512)}
+
 
 def _act(kind: str, x):
     if kind == "silu":

@@ -48,6 +48,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import LANE, interpret_default, round_up
 
+# Autotune candidate lattice (tuning/autotune.py): KV page sizes the
+# tuner scores for the paged decode stream.  Pages are HBM streaming
+# granules, not MXU operands, so sub-lane sizes are legal; the tuned
+# winner becomes the PagedKVCache page size AND the verify-window
+# granule (verify_attention inherits it — the pool is shared).
+TUNE_SPACE = {"page_size": (8, 16, 32, 64)}
+
 NEG_INF = -1e30
 
 

@@ -18,6 +18,12 @@ from jax.experimental import pallas as pl
 
 from .common import interpret_default, pick_block
 
+# Autotune candidate lattice (tuning/autotune.py): block-target grids
+# the measured-latency tuner scores for this kernel family.  Points
+# the kernel lint rejects (lane floor, VMEM budget) are pruned before
+# anything is compiled or timed.
+TUNE_SPACE = {"block_t": (128, 256, 512), "block_n": (128, 256, 512)}
+
 
 def _kernel(x_ref, scale_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)

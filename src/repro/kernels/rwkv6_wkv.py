@@ -24,6 +24,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import interpret_default
 
+# Autotune candidate lattice (tuning/autotune.py): WKV chunk lengths.
+# The N x N state outer products grow quadratically with the chunk,
+# so the grid stays small (the planner also caps at 64).
+TUNE_SPACE = {"chunk": (16, 32, 64)}
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref,
                 state_ref, *, n_chunks: int, chunk: int):

@@ -34,6 +34,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import interpret_default, pick_block
 
+# Autotune candidate lattice (tuning/autotune.py) shared by
+# streamed_ffn and streamed_mlp; lint-pruned before timing.
+TUNE_SPACE = {"block_t": (128, 256, 512), "block_f": (128, 256, 512)}
+
 
 def _act(kind: str, x):
     if kind == "silu":

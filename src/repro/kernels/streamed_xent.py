@@ -24,6 +24,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import interpret_default, pick_block
 
+# Autotune candidate lattice (tuning/autotune.py): vocab tiles are
+# the dominant stream (the [T, V] logits never materialize), token
+# tiles bound the online-logsumexp state resident per step.
+TUNE_SPACE = {"block_t": (128, 256), "block_v": (512, 1024, 2048)}
+
 NEG_INF = -1e30
 
 

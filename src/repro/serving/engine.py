@@ -113,7 +113,7 @@ import os
 import time
 import warnings as _warnings
 from collections import deque
-from contextlib import nullcontext
+from contextlib import ExitStack, nullcontext
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional
 
@@ -220,6 +220,7 @@ class ServingEngine:
                  speculative: bool = False, draft_len: int = 4,
                  quant: Optional[str] = None,
                  verify: Optional[str] = None,
+                 autotune=None,
                  mesh=None):
         # Quantized serving (DESIGN.md §14): ``quant=`` overrides the
         # config's QuantMode for this engine — the plan, kernel choices,
@@ -257,6 +258,21 @@ class ServingEngine:
         # EMA of per-dispatch useful-tick fraction — the adaptive prefill
         # budget's decode-pressure signal (1.0 = every scan tick useful).
         self.decode_eff = 1.0
+
+        # Measured-latency autotuning (DESIGN.md §16): ``autotune=`` is a
+        # bool / table path / TuneTable / Tuner.  The resolved tuner is
+        # installed (via contextvar, like the mesh) around every plan
+        # resolution AND dispatch trace, so the model entry points —
+        # which re-resolve plans at their own token counts — pick up
+        # tuned block/page choices too.  Tune once at first start,
+        # load-and-reuse thereafter: a warm table scores every candidate
+        # from disk and performs zero measurements.
+        from ..tuning.autotune import resolve_tuner, use_tuner
+        self._use_tuner = use_tuner
+        self.tuner = resolve_tuner(autotune, cfg)
+        if self.tuner is not None:
+            for d in self.tuner.table.diagnostics:
+                _warnings.warn(f"autotune table degraded: {d}")
 
         # One plan resolution drives both stream granularities: the KV
         # page size (decode) and the prefill chunk size (a multiple of
@@ -551,14 +567,40 @@ class ServingEngine:
             "rollbacks": 0,
             "rollback_pages": 0,
             "verify_traces": 0,
+            # Plan provenance (DESIGN.md §16): where the plan's kernel
+            # latencies came from, and what the tuner did to get them.
+            "plan_source": (self.plan.cost_source
+                            if self.plan is not None else "analytic"),
+            "autotuned": int(self.tuner is not None),
+            "tune_table": (self.tuner.table.path or ""
+                           if self.tuner is not None else ""),
+            "tune_hits": 0, "tune_misses": 0, "tune_measured": 0,
+            "tune_pruned": 0, "tune_entries": 0,
         }
+        self._refresh_tune_metrics()
+
+    def _refresh_tune_metrics(self) -> None:
+        if self.tuner is None:
+            return
+        self.metrics["tune_hits"] = self.tuner.table.hits
+        self.metrics["tune_misses"] = self.tuner.table.misses
+        self.metrics["tune_measured"] = self.tuner.stats.measured
+        self.metrics["tune_pruned"] = self.tuner.stats.pruned
+        self.metrics["tune_entries"] = len(self.tuner.table)
+        if self.plan is not None:
+            self.metrics["plan_source"] = self.plan.cost_source
 
     def _mesh_ctx(self):
-        """Context installing the engine's mesh for plan resolution and
-        fused-wrapper shard_map dispatch (trace-time; no-op without a
-        mesh).  Every jitted call runs inside it so a first-call retrace
-        always sees the mesh."""
-        return use_mesh(self.mesh) if self.mesh is not None else nullcontext()
+        """Context installing the engine's mesh AND tuner for plan
+        resolution and fused-wrapper shard_map dispatch (trace-time;
+        no-op without either).  Every jitted call runs inside it so a
+        first-call retrace always sees both."""
+        stack = ExitStack()
+        if self.mesh is not None:
+            stack.enter_context(use_mesh(self.mesh))
+        if self.tuner is not None:
+            stack.enter_context(self._use_tuner(self.tuner))
+        return stack
 
     # -------------------------------------------------------------- API
     def generate(self, prompts: List[np.ndarray],
@@ -622,6 +664,7 @@ class ServingEngine:
             self.metrics["dispatches_per_token"] = (
                 self.metrics["verify_dispatches"]
                 / max(self.metrics["spec_tokens"], 1))
+        self._refresh_tune_metrics()
         return reqs
 
     # ------------------------------------------------------- scheduling

@@ -1,0 +1,26 @@
+"""Measured-latency autotuner (DESIGN.md §16).
+
+Three parts: a measurement harness (``measure``) that compiles and times
+lint-legal candidate kernel configs in isolation (analytic surrogate in
+interpret mode, so CI stays deviceless); a persistent, versioned,
+backend-fingerprinted latency table (``table``) with build-once/reuse
+semantics and atomic writes; and the plumbed objective (``autotune``)
+that rewrites a StreamPlan's block/page/chunk choices from measurements
+and stamps every ``KernelChoice`` with its cost provenance.  Entry
+points: ``ServingEngine(autotune=...)``, ``build_stream_plan(tune=...)``,
+and the ``python -m repro.tuning`` round-trip check CI runs.
+"""
+
+from .autotune import (Tuner, TunerStats, active_tuner,
+                       default_table_path, enumerate_candidates,
+                       resolve_tuner, use_tuner)
+from .measure import analytic_estimate, measure, measure_candidate
+from .table import (SCHEMA_VERSION, TuneEntry, TuneTable,
+                    backend_fingerprint, make_key)
+
+__all__ = [
+    "SCHEMA_VERSION", "TuneEntry", "TuneTable", "Tuner", "TunerStats",
+    "active_tuner", "analytic_estimate", "backend_fingerprint",
+    "default_table_path", "enumerate_candidates", "make_key", "measure",
+    "measure_candidate", "resolve_tuner", "use_tuner",
+]

@@ -1,0 +1,124 @@
+"""Autotune round-trip check: ``python -m repro.tuning --arch gpt2``.
+
+The executable form of DESIGN.md §16's build-once/reuse contract, run by
+the CI ``tune`` job (deviceless: candidates are scored by the analytic
+surrogate, which exercises every code path except the wall-clock timer):
+
+  1. First engine start with ``autotune=<table path>`` must tune — only
+     lint-legal candidates are scored — and persist the table to disk.
+  2. Second engine start against the same path must perform ZERO
+     measurement dispatches (every candidate served from the table) and
+     resolve a bit-identical StreamPlan (frozen-dataclass equality).
+  3. Both engines must greedy-decode identical tokens for identical
+     prompts — tuning changes stream granularity, never kernel math.
+
+Exits nonzero on any violation; prints a stats JSON on success.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.tuning")
+    ap.add_argument("--arch", default="gpt2")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--table", default=None,
+                    help="table path (default: a fresh temp dir)")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from ..configs import get_config
+    from ..core.stream_plan import plan_for
+    from ..models import init_params
+    from ..serving.engine import ServingEngine
+
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              use_fused_kernels=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(3, 17, dtype=np.int32)]
+
+    tmp = None
+    if args.table is None:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_tune_")
+        path = os.path.join(tmp.name, f"{cfg.name}.json")
+    else:
+        path = args.table
+
+    failures = []
+
+    def check(ok: bool, what: str) -> None:
+        if not ok:
+            failures.append(what)
+            print(f"FAIL  {what}", file=sys.stderr)
+
+    try:
+        eng1 = ServingEngine(cfg, params, batch_slots=args.slots,
+                             max_len=args.max_len, autotune=path)
+        out1 = eng1.generate([p.copy() for p in prompts],
+                             max_new_tokens=args.new_tokens)
+        check(os.path.exists(path), "first start persisted the table")
+        check(eng1.tuner.stats.measured > 0,
+              "first start scored candidates not in the table")
+        check(eng1.metrics["tune_entries"] > 0,
+              "first start filled table entries")
+        check(eng1.tuner.stats.candidates
+              >= eng1.tuner.stats.pruned + eng1.tuner.stats.measured,
+              "candidate accounting (considered >= pruned + scored)")
+
+        # Fresh process stand-in: drop the plan cache so the second
+        # engine re-resolves everything through its own (disk) table.
+        plan_for.cache_clear()
+        measured_before = eng1.tuner.stats.measured
+
+        eng2 = ServingEngine(cfg, params, batch_slots=args.slots,
+                             max_len=args.max_len, autotune=path)
+        out2 = eng2.generate([p.copy() for p in prompts],
+                             max_new_tokens=args.new_tokens)
+        check(eng2.tuner.stats.measured == 0,
+              "second start performed zero measurements "
+              f"(got {eng2.tuner.stats.measured})")
+        check(eng2.metrics["tune_hits"] > 0,
+              "second start served candidates from the table")
+        check(eng1.plan == eng2.plan,
+              "second start resolved a bit-identical plan")
+        check(eng1.tuner.stats.measured == measured_before,
+              "second start did not dirty the first tuner")
+        for a, b in zip(out1, out2):
+            check(a.out_tokens == b.out_tokens,
+                  f"greedy tokens identical for request {a.rid}")
+
+        stats = {
+            "arch": cfg.name,
+            "table": path,
+            "entries": eng2.metrics["tune_entries"],
+            "candidates": eng1.tuner.stats.candidates,
+            "pruned_by_lint": eng1.tuner.stats.pruned,
+            "measured_first_start": measured_before,
+            "measured_second_start": eng2.tuner.stats.measured,
+            "table_hits_second_start": eng2.tuner.table.hits,
+            "plan_source": eng2.metrics["plan_source"],
+            "stages_tuned": eng1.tuner.stats.stages,
+            "ok": not failures,
+        }
+        print(json.dumps(stats, indent=2))
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,369 @@
+"""Autotuner: lint-pruned candidate search over per-family block lattices.
+
+The measured-latency replacement for the FPGA-era analytic DSE objective
+(DESIGN.md §16).  For every fused stage of a ``StreamPlan`` the tuner
+
+  1. enumerates the kernel family's ``TUNE_SPACE`` lattice (declared next
+     to each kernel in ``repro.kernels.*``), always keeping the plan's
+     original analytic choice as a candidate and deduplicating points
+     that clip to the same effective blocks;
+  2. prunes the grid BEFORE anything is compiled or timed by running the
+     PR 8 kernel lint (``analysis.kernel_lint.check_kernels``) on a
+     stage-swapped copy of the plan — a candidate that draws any error
+     OR warning at its own stage (lane floor, VMEM budget, non-dividing
+     block) is discarded, so the tuned table can never select a plan the
+     static verifier rejects;
+  3. scores the survivors through the persistent ``TuneTable`` — a hit
+     reuses the stored latency, a miss measures (or, deviceless,
+     analytically estimates) the candidate and fills the table — and
+     stamps the winning ``KernelChoice`` with its cost provenance.
+
+``verify_attention`` is never tuned independently: it inherits the tuned
+``paged_attention`` page size per layer, because both stream the SAME
+paged KV pool and a divergent granule would split the pool geometry.
+
+The tuner reaches plan resolution the same way the mesh does: a context
+variable.  ``ServingEngine(autotune=...)`` enters ``use_tuner`` around
+every plan resolution and dispatch trace, and ``core.stream_plan
+.plan_for`` consults ``active_tuner()`` after the cached base build — so
+the model entry points (which re-resolve plans at their own token
+counts) pick up tuned plans without any signature churn.  ``tune_plan``
+memoizes per (config, shape, mesh), and candidate evaluation is
+deterministic (sorted lattice order, strict-min ties keep the first
+candidate), so a warm table yields bit-identical plans on every start.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+from contextlib import contextmanager
+from contextvars import ContextVar
+from dataclasses import dataclass, replace
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from ..core.platforms import PLATFORMS, TPU_V5E, Platform
+from ..core.stream_plan import KernelChoice, StreamPlan
+from ..kernels.common import pick_block
+from .measure import analytic_estimate, measure_candidate
+from .table import TuneEntry, TuneTable, make_key
+
+# Environment override for where ``autotune=True`` engines keep their
+# tables; one JSON file per arch (keys inside carry quant/mesh/shape).
+TUNE_DIR_ENV = "REPRO_TUNE_DIR"
+DEFAULT_TUNE_DIR = ".repro_tune"
+
+
+def default_table_path(cfg: ModelConfig) -> str:
+    d = os.environ.get(TUNE_DIR_ENV, DEFAULT_TUNE_DIR)
+    return os.path.join(d, f"{cfg.name}.json")
+
+
+def _tune_spaces() -> Dict[str, Dict[str, Tuple[int, ...]]]:
+    """implementation name -> candidate lattice, from the family modules.
+
+    Imported via ``importlib`` submodule paths — the package re-exports
+    shadow the module names with the wrapper functions."""
+    import importlib
+
+    def space(mod: str) -> Dict[str, Tuple[int, ...]]:
+        return importlib.import_module(f"repro.kernels.{mod}").TUNE_SPACE
+
+    ffn = space("streamed_ffn")
+    return {
+        "rmsnorm_matmul": space("rmsnorm_matmul"),
+        "block_matmul": space("block_matmul"),
+        "flash_attention": space("flash_attention"),
+        "paged_attention": space("paged_attention"),
+        # verify_attention inherits decode_attn's tuned page size (shared
+        # pool geometry) — see _sync_verify_pages.
+        "verify_attention": {},
+        "streamed_ffn": ffn,
+        "streamed_mlp": ffn,
+        "moe_experts": space("moe_experts"),
+        "mamba2_scan": space("mamba2_scan"),
+        "rwkv6_wkv": space("rwkv6_wkv"),
+        "streamed_xent": space("streamed_xent"),
+    }
+
+
+def _platform_for(plan: StreamPlan) -> Platform:
+    for p in PLATFORMS.values():
+        if p.name == plan.platform:
+            return p
+    return PLATFORMS.get(str(plan.platform).lower().replace("-", "_"),
+                         TPU_V5E)
+
+
+def _block_extents(cfg: ModelConfig, plan: StreamPlan, stage: str,
+                   choice: KernelChoice) -> Dict[str, int]:
+    """Extent each tunable block clips against — for candidate dedup."""
+    t = max(1, plan.tokens)
+    s = max(1, plan.kv_len)
+    if stage == "qkv":
+        return {"block_t": t, "block_n": min(cfg.q_dim, cfg.kv_dim)}
+    if stage == "attention":
+        return {"block_q": t, "block_kv": s}
+    if stage == "ffn":
+        if choice.implementation == "moe_experts":
+            return {"block_t": t}
+        return {"block_t": t, "block_f": cfg.d_ff}
+    if stage == "mixer":
+        return {"chunk": t}
+    if stage == "lm_head":
+        return {"block_t": t, "block_v": cfg.vocab_size}
+    return {}       # page_size is a raw streaming granule, no clip
+
+
+def _signature(cfg: ModelConfig, plan: StreamPlan, stage: str,
+               cand: KernelChoice) -> Tuple[Tuple[str, int], ...]:
+    """Effective-block identity: two lattice points that clip to the same
+    kernel program collapse to one candidate."""
+    ext = _block_extents(cfg, plan, stage, cand)
+    return tuple(
+        (name, pick_block(max(1, ext[name]), max(1, int(val)))
+         if name in ext else int(val))
+        for name, val in cand.blocks)
+
+
+def _shape_ctx(cfg: ModelConfig, plan: StreamPlan
+               ) -> Tuple[Tuple[str, int], ...]:
+    """Op-shape context baked into every table key: all dims a candidate
+    kernel's program can depend on."""
+    return (("t", max(1, plan.tokens)), ("s", max(1, plan.kv_len)),
+            ("d", cfg.d_model), ("n", min(cfg.q_dim, cfg.kv_dim)),
+            ("f", cfg.d_ff), ("v", cfg.vocab_size),
+            ("h", cfg.num_heads), ("hkv", cfg.num_kv_heads))
+
+
+def enumerate_candidates(cfg: ModelConfig, plan: StreamPlan, stage: str,
+                         choice: KernelChoice) -> List[KernelChoice]:
+    """Deduped candidate list for one stage, the original choice first.
+
+    Candidates vary only the block names the family's ``TUNE_SPACE``
+    declares; flags (``fuse_norm``, ``w8``) and the sharding claim are
+    carried through unchanged — tuning never changes kernel math, only
+    stream granularity, which is why tuned greedy tokens stay
+    bit-identical.
+    """
+    space = _tune_spaces().get(choice.implementation, {})
+    have = dict(choice.blocks)
+    names = sorted(n for n in space if n in have)
+    out: List[KernelChoice] = [choice]
+    seen = {_signature(cfg, plan, stage, choice)}
+    for combo in itertools.product(*(sorted(space[n]) for n in names)):
+        override = dict(zip(names, combo))
+        blocks = tuple((n, override.get(n, v)) for n, v in choice.blocks)
+        cand = replace(choice, blocks=blocks)
+        sig = _signature(cfg, plan, stage, cand)
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(cand)
+    return out
+
+
+def _sync_verify_pages(plan: StreamPlan) -> StreamPlan:
+    """verify_attn inherits decode_attn's (tuned) page size per layer —
+    the speculative verify window streams the SAME paged pool."""
+    for kind, lp in plan.layers:
+        if not (lp.verify_attn.fused and lp.decode_attn.fused):
+            continue
+        ps = lp.decode_attn.block("page_size", 16)
+        if lp.verify_attn.block("page_size") == ps:
+            continue
+        blocks = tuple((n, ps if n == "page_size" else v)
+                       for n, v in lp.verify_attn.blocks)
+        plan = plan.with_stage(kind, "verify_attn", replace(
+            lp.verify_attn, blocks=blocks, source=lp.decode_attn.source))
+    return plan
+
+
+@dataclass
+class TunerStats:
+    """Per-tuner counters (the table itself counts hits/misses)."""
+    measured: int = 0       # candidate evaluations NOT served from table
+    pruned: int = 0         # lattice points rejected by the kernel lint
+    candidates: int = 0     # deduped lattice points considered
+    stages: int = 0         # fused stages tuned
+
+
+class Tuner:
+    """Stage-level autotuner over one ``TuneTable``.
+
+    ``mode``:
+      * ``"hybrid"``   (default) — table hits are reused, misses are
+        measured (or analytically estimated, deviceless) and filled in.
+      * ``"measured"`` — only table entries are trusted; a candidate the
+        table has never seen is skipped, and a stage with no scored
+        candidate keeps its analytic choice.
+      * ``"analytic"`` — score everything with the surrogate, touch the
+        table not at all (A/B baseline).
+    """
+
+    def __init__(self, table: Optional[TuneTable] = None, *,
+                 mode: str = "hybrid", force_measure: bool = False,
+                 autosave: bool = True):
+        if mode not in ("hybrid", "measured", "analytic"):
+            raise ValueError(f"unknown tuner mode {mode!r} "
+                             "(hybrid | measured | analytic)")
+        if table is None:
+            table = TuneTable()
+        elif isinstance(table, str):
+            table = TuneTable.load(table)
+        self.table = table
+        self.mode = mode
+        self.force_measure = force_measure
+        self.autosave = autosave
+        self.stats = TunerStats()
+        self._memo: Dict[object, StreamPlan] = {}
+
+    # ------------------------------------------------------------ plans
+    def tune_plan(self, cfg: ModelConfig, plan: StreamPlan, *,
+                  mesh=None, platform: Optional[Platform] = None
+                  ) -> StreamPlan:
+        """Tuned copy of ``plan`` (memoized per config + shape + mesh)."""
+        key = (cfg, plan.tokens, plan.kv_len, plan.mesh_axes)
+        got = self._memo.get(key)
+        if got is not None:
+            return got
+        plat = platform or _platform_for(plan)
+        tuned = plan
+        sources: List[str] = []
+        for kind, stage, choice in list(plan.stage_choices()):
+            if not choice.fused or stage == "verify_attn":
+                continue
+            best = self._tune_stage(cfg, tuned, kind, stage, choice, plat)
+            if best is None:
+                continue
+            tuned = tuned.with_stage(kind, stage, best)
+            sources.append(best.source)
+            self.stats.stages += 1
+        tuned = _sync_verify_pages(tuned)
+        # Provenance is about where the NUMBERS came from, not whether the
+        # tuner ran: all-surrogate tuning (deviceless CI) stays "analytic";
+        # any measured stage makes the plan "hybrid"; all-measured makes it
+        # "measured".  Tuned-ness itself is reported via TunerStats.
+        if sources and any(s == "measured" for s in sources):
+            cost = ("measured" if all(s == "measured" for s in sources)
+                    else "hybrid")
+            tuned = replace(tuned, cost_source=cost)
+        if (self.autosave and self.table.path and self.table.dirty
+                and not self.table.frozen):
+            self.table.save()
+        self._memo[key] = tuned
+        return tuned
+
+    # ----------------------------------------------------------- stages
+    def _legal(self, cfg: ModelConfig, plan: StreamPlan, kind: str,
+               stage: str, cand: KernelChoice,
+               platform: Platform) -> bool:
+        """PR 8 lint as the pruning oracle: the candidate must draw ZERO
+        error/warning diagnostics at its own stage (the registry sweep
+        requires clean plans, so a warning is a rejection too)."""
+        from ..analysis.kernel_lint import check_kernels
+        swapped = plan.with_stage(kind, stage, cand)
+        where = f"{kind}.{stage}"
+        return not any(d.severity in ("error", "warning")
+                       and d.stage == where
+                       for d in check_kernels(swapped, cfg, platform))
+
+    def _score(self, cfg: ModelConfig, plan: StreamPlan, kind: str,
+               stage: str, cand: KernelChoice, platform: Platform
+               ) -> Optional[Tuple[float, str]]:
+        if self.mode == "analytic":
+            return analytic_estimate(cfg, plan, stage, cand, platform), \
+                "analytic"
+        key = make_key(cand.implementation, shape=_shape_ctx(cfg, plan),
+                       dtype=cfg.dtype, quant=cfg.quant,
+                       mesh_axes=plan.mesh_axes, blocks=cand.blocks)
+        entry = self.table.get(key)
+        if entry is not None:
+            return entry.latency_s, entry.source
+        if self.mode == "measured":
+            return None         # trust the table only: unseen = skipped
+        latency, source = measure_candidate(
+            cfg, plan, kind, stage, cand, platform=platform,
+            force=self.force_measure)
+        self.stats.measured += 1
+        if not self.table.frozen:
+            self.table.put(key, TuneEntry(latency_s=latency,
+                                          source=source))
+        return latency, source
+
+    def _tune_stage(self, cfg: ModelConfig, plan: StreamPlan, kind: str,
+                    stage: str, choice: KernelChoice,
+                    platform: Platform) -> Optional[KernelChoice]:
+        cands = enumerate_candidates(cfg, plan, stage, choice)
+        self.stats.candidates += len(cands)
+        best: Optional[KernelChoice] = None
+        best_lat = float("inf")
+        best_src = "analytic"
+        for i, cand in enumerate(cands):
+            # The original analytic choice (i == 0) is never pruned — it
+            # is the fallback the plan already committed to.
+            if i > 0 and not self._legal(cfg, plan, kind, stage, cand,
+                                         platform):
+                self.stats.pruned += 1
+                continue
+            scored = self._score(cfg, plan, kind, stage, cand, platform)
+            if scored is None:
+                continue
+            lat, src = scored
+            if lat < best_lat:      # strict: ties keep the earlier point
+                best, best_lat, best_src = cand, lat, src
+        if best is None:
+            return None
+        return replace(best, source=best_src)
+
+
+# --------------------------------------------------------------------- #
+# Context plumbing (mirrors distributed.context.use_mesh)
+# --------------------------------------------------------------------- #
+
+_ACTIVE_TUNER: ContextVar[Optional[Tuner]] = ContextVar(
+    "repro_active_tuner", default=None)
+
+
+def active_tuner() -> Optional[Tuner]:
+    """The tuner the enclosing ``use_tuner`` installed, or None."""
+    return _ACTIVE_TUNER.get()
+
+
+@contextmanager
+def use_tuner(tuner: Optional[Tuner]) -> Iterator[Optional[Tuner]]:
+    """Install ``tuner`` for plan resolution within the dynamic extent
+    (None is a no-op, so callers need not branch)."""
+    token = _ACTIVE_TUNER.set(tuner)
+    try:
+        yield tuner
+    finally:
+        _ACTIVE_TUNER.reset(token)
+
+
+def resolve_tuner(spec, cfg: ModelConfig) -> Optional[Tuner]:
+    """Engine-facing spec resolution for ``ServingEngine(autotune=...)``:
+
+      * ``None`` / ``False``   -> no tuner
+      * ``True``               -> persistent table at the default path
+                                  (``$REPRO_TUNE_DIR`` or ``.repro_tune``)
+      * ``str``                -> table file (``*.json``) or directory
+      * ``TuneTable`` / ``Tuner`` -> used as given
+    """
+    if spec is None or spec is False:
+        return None
+    if isinstance(spec, Tuner):
+        return spec
+    if isinstance(spec, TuneTable):
+        return Tuner(spec)
+    if spec is True:
+        path = default_table_path(cfg)
+    elif isinstance(spec, (str, os.PathLike)):
+        path = os.fspath(spec)
+        if not path.endswith(".json"):
+            path = os.path.join(path, f"{cfg.name}.json")
+    else:
+        raise TypeError(f"autotune= accepts bool, path, TuneTable, or "
+                        f"Tuner; got {type(spec).__name__}")
+    return Tuner(TuneTable.load(path))
