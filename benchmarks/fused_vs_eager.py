@@ -40,6 +40,12 @@ Measures the three model entry points under both execution paths:
     engine under ``quant=kv_int8 / kv_fp8 / w8_kv8`` vs ``none`` — KV
     bytes per token, pages per slot, effective KV itemsize, plus the
     accuracy gate's max-logit-error and greedy-vs-f32 equality per mode.
+  * latency distribution — the telemetry subsystem (DESIGN.md §17): a
+    mixed chunked+speculative burst with the event recorder ON vs OFF —
+    TTFT/TPOT/queue-wait p50/p90/p99 from the windowed metric snapshot,
+    the recorded event count, the wall-clock overhead ratio (telemetry
+    must stay under a few percent) and a greedy-token equality check
+    (telemetry is a pure observer).
 
 ``interpret_mode`` is reported ONCE at the report's top level (every
 fused number in the file shares the same backend).
@@ -421,6 +427,63 @@ def bench_autotune(base, params, *, max_len: int, decode_block: int,
     return out
 
 
+def bench_latency_distribution(base, params, *, max_len: int,
+                               decode_block: int,
+                               new_tokens: int) -> Dict[str, Any]:
+    """Telemetry on vs off on a mixed chunked+speculative burst
+    (DESIGN.md §17).
+
+    Two engines over the same mixed-length repetitive burst: one with
+    the observability subsystem recording the full event stream, one
+    with the no-op recorder.  Both are warmed first so the walls
+    compare steady-state dispatch loops, not compiles.  Records the
+    TTFT/TPOT/queue-wait percentile fields from the windowed snapshot
+    (``snapshot("last_generate")`` — the measured burst only), the
+    event count, the median-of-3 wall-clock overhead ratio, and a
+    greedy-token equality check: telemetry must be a pure observer.
+    """
+    if not (supports_chunked_prefill(base) and supports_speculative(base)):
+        return {"skipped": f"{base.name}: needs chunked prefill and "
+                           "speculative decoding"}
+    cfg = dataclasses.replace(base, use_fused_kernels=True)
+    periods = ((1, 2, 3, 4), (7, 8, 9), (5, 6), (2, 9))
+    prompts = [np.array((p * max_len)[:n], np.int32)
+               for p, n in zip(periods, (max_len // 3, max_len // 6,
+                                         max_len // 2, max_len // 4))]
+
+    def serve(telemetry: bool) -> Dict[str, Any]:
+        eng = ServingEngine(cfg, params, batch_slots=2, max_len=max_len,
+                            decode_block=decode_block, chunked=True,
+                            prefill_chunk=max(8, max_len // 8),
+                            speculative=True, draft_len=4,
+                            telemetry=telemetry)
+        eng.generate([p.copy() for p in prompts],
+                     max_new_tokens=2)               # absorb compiles
+        walls = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            reqs = eng.generate([p.copy() for p in prompts],
+                                max_new_tokens=new_tokens)
+            walls.append(time.perf_counter() - t0)
+        return {"engine": eng, "wall_s": float(np.median(walls)),
+                "tokens": [r.out_tokens for r in reqs]}
+
+    on, off = serve(True), serve(False)
+    eng = on["engine"]
+    snap = eng.snapshot("last_generate")             # the last burst only
+    out: Dict[str, Any] = {
+        "wall_on_s": on["wall_s"],
+        "wall_off_s": off["wall_s"],
+        "overhead_ratio": on["wall_s"] / max(off["wall_s"], 1e-9),
+        "tokens_equal": on["tokens"] == off["tokens"],
+        "events": len(eng.obs.events),
+    }
+    for h in ("ttft_s", "tpot_s", "queue_wait_s"):
+        out[h] = {k: snap[f"{h}_{k}"]
+                  for k in ("count", "mean", "p50", "p90", "p99")}
+    return out
+
+
 def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     batch, seq = (2, 64) if quick else (2, 128)
     iters = 3 if quick else 7
@@ -568,6 +631,9 @@ def bench_config(arch: str, *, quick: bool) -> Dict[str, Any]:
     result["autotune"] = bench_autotune(
         fused_cfg, params, max_len=max_len, decode_block=decode_block,
         new_tokens=new_tokens)
+    result["latency_distribution"] = bench_latency_distribution(
+        base, params, max_len=max_len, decode_block=decode_block,
+        new_tokens=new_tokens)
     return result
 
 
@@ -654,6 +720,17 @@ def main(argv=None) -> int:
             f"{at['tuned_cold']['pruned_by_lint']} pruned, warm "
             f"measured={at['tuned_warm']['measured']}, "
             f"identical={at['plans_identical']})")
+        ld = r["latency_distribution"]
+        if "skipped" in ld:
+            lat_note = "latency distribution skipped"
+        else:
+            lat_note = (
+                f"telemetry overhead x{ld['overhead_ratio']:.3f} "
+                f"({ld['events']} events, ttft p50/p90/p99 "
+                f"{ld['ttft_s']['p50']*1e3:.0f}/"
+                f"{ld['ttft_s']['p90']*1e3:.0f}/"
+                f"{ld['ttft_s']['p99']*1e3:.0f}ms, "
+                f"tokens_equal={ld['tokens_equal']})")
         print(f"{r['arch']}: train {e['train_s']*1e3:.1f}ms eager / "
               f"{f['train_s']*1e3:.1f}ms fused | decode "
               f"{e['decode_tokens_per_s']:.1f} vs "
@@ -662,7 +739,7 @@ def main(argv=None) -> int:
               f"{dc['contiguous']['kv_bytes_peak']} contiguous bytes | "
               f"{burst_note} | {prefix_note} | {spec_note} | "
               f"{shard_note} | {quant_note} | {tune_note} | "
-              f"loss diff {r['loss_abs_diff']:.2e}",
+              f"{lat_note} | loss diff {r['loss_abs_diff']:.2e}",
               flush=True)
 
     with open(args.out, "w") as fh:

@@ -1,0 +1,163 @@
+"""``python -m repro.obs`` — telemetry demo / self-check CLI.
+
+``--demo`` bursts a reduced gpt2 engine (chunked prefill + speculative
+decode, the same mixed traffic the benchmarks use), with telemetry ON
+and OFF, then:
+
+  * asserts the greedy tokens are bit-identical (telemetry is a pure
+    observer) and the OFF engine recorded zero events,
+  * asserts the trace-probe counters equal the matching TRACE_* event
+    counts (both bump at the same traced-body sites),
+  * validates the Chrome trace against the schema checker and the
+    TTFT/TPOT percentile ordering (p50 <= p90 <= p99),
+  * writes three artifacts to ``--out`` (default ``obs_demo/``):
+    ``trace.json`` (load in https://ui.perfetto.dev or
+    chrome://tracing), ``events.jsonl`` and ``metrics.prom``.
+
+Exit status is nonzero on any failed check, so CI can run it as a
+smoke test.  ``--tokens`` / ``--prompts`` scale the burst.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+from . import (
+    TRACE_DECODE,
+    TRACE_PREFILL,
+    TRACE_VERIFY,
+    chrome_trace,
+    events_jsonl,
+    prometheus_text,
+    validate_chrome_trace,
+)
+
+
+def _demo_engine(telemetry: bool, *, max_len: int):
+    import jax
+
+    from ..configs import get_config
+    from ..models import init_params
+    from ..serving import ServingEngine
+
+    cfg = dataclasses.replace(get_config("gpt2").reduced(),
+                              dtype="float32", use_fused_kernels=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=max_len,
+                        decode_block=4, chunked=True,
+                        prefill_chunk=max(8, max_len // 8),
+                        speculative=True, draft_len=4,
+                        telemetry=telemetry)
+    return cfg, eng
+
+
+def _prompts(cfg, n: int, max_len: int) -> List[np.ndarray]:
+    periods = ((1, 2, 3, 4), (7, 8, 9), (5, 6), (2, 9), (3, 1, 4))
+    lens = (max_len // 3, max_len // 6, max_len // 2, max_len // 4,
+            max_len // 5)
+    v = cfg.vocab_size
+    return [np.array((periods[i % len(periods)] * max_len)[:max(2, lens[i % len(lens)])],
+                     np.int32) % v for i in range(n)]
+
+
+def run_demo(out_dir: str, *, n_prompts: int, new_tokens: int,
+             max_len: int) -> int:
+    failures: List[str] = []
+
+    def check(ok: bool, what: str) -> None:
+        print(("  ok   " if ok else "  FAIL ") + what)
+        if not ok:
+            failures.append(what)
+
+    print("building engines (telemetry on / off) ...")
+    cfg, eng = _demo_engine(True, max_len=max_len)
+    _, eng_off = _demo_engine(False, max_len=max_len)
+    prompts = _prompts(cfg, n_prompts, max_len)
+
+    t0 = time.perf_counter()
+    reqs = eng.generate([p.copy() for p in prompts],
+                        max_new_tokens=new_tokens)
+    wall_on = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    reqs_off = eng_off.generate([p.copy() for p in prompts],
+                                max_new_tokens=new_tokens)
+    wall_off = time.perf_counter() - t0
+    print(f"burst: {n_prompts} prompts x {new_tokens} tokens, "
+          f"{wall_on * 1e3:.0f}ms on / {wall_off * 1e3:.0f}ms off")
+
+    check([r.out_tokens for r in reqs] == [r.out_tokens for r in reqs_off],
+          "greedy tokens identical with telemetry on vs off")
+    check(eng_off.obs.events == () and not eng_off.obs.enabled,
+          "telemetry-off recorder captured zero events")
+    check(len(eng.obs.events) > 0, "telemetry-on recorder captured events")
+    for name, probe in ((TRACE_PREFILL, "prefill"), (TRACE_DECODE, "decode"),
+                        (TRACE_VERIFY, "verify")):
+        check(eng.obs.count(name) == eng._traces[probe],
+              f"{name} events == {probe} trace probe "
+              f"({eng._traces[probe]})")
+
+    trace = chrome_trace(eng.obs.events)
+    errs = validate_chrome_trace(trace)
+    check(not errs, "chrome trace passes schema validation"
+          + ("" if not errs else f": {errs[:3]}"))
+
+    snap = eng.snapshot("last_generate")
+    for h in ("ttft_s", "tpot_s"):
+        p50, p90, p99 = (snap[f"{h}_p50"], snap[f"{h}_p90"],
+                         snap[f"{h}_p99"])
+        check(p50 <= p90 <= p99,
+              f"{h} percentiles ordered: p50={p50:.4g} <= p90={p90:.4g}"
+              f" <= p99={p99:.4g}")
+        check(snap[f"{h}_count"] == len(reqs),
+              f"{h} observed once per request")
+
+    prom = prometheus_text(eng.registry)
+    check("repro_ttft_s_bucket{" in prom and "repro_generated_total" in prom,
+          "prometheus exposition has histograms and counters")
+
+    os.makedirs(out_dir, exist_ok=True)
+    import json
+    with open(os.path.join(out_dir, "trace.json"), "w") as fh:
+        json.dump(trace, fh)
+    with open(os.path.join(out_dir, "events.jsonl"), "w") as fh:
+        fh.write(events_jsonl(eng.obs.events))
+    with open(os.path.join(out_dir, "metrics.prom"), "w") as fh:
+        fh.write(prom)
+    print(f"wrote {out_dir}/trace.json ({len(trace['traceEvents'])} rows, "
+          f"load in ui.perfetto.dev), events.jsonl "
+          f"({len(eng.obs.events)} events), metrics.prom")
+
+    if failures:
+        print(f"{len(failures)} check(s) FAILED", file=sys.stderr)
+        return 1
+    print("all checks passed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__)
+    ap.add_argument("--demo", action="store_true",
+                    help="run the burst demo + self-checks")
+    ap.add_argument("--out", default="obs_demo",
+                    help="artifact directory (default: obs_demo/)")
+    ap.add_argument("--prompts", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=96)
+    args = ap.parse_args(argv)
+    if not args.demo:
+        ap.print_help()
+        return 2
+    return run_demo(args.out, n_prompts=args.prompts,
+                    new_tokens=args.tokens, max_len=args.max_len)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -130,6 +130,12 @@ from ..models import (decode_step, init_cache, prefill, resolve_plan,
                       verify_step)
 from ..models import prefill_chunk as _model_prefill_chunk
 from ..models.params import cache_leaf_kind, cache_leaf_name
+from ..obs import (DISPATCH_DECODE, DISPATCH_PREFILL,
+                   DISPATCH_PREFILL_CHUNK, DISPATCH_VERIFY, MetricsView,
+                   Registry, REQ_ADMITTED, REQ_FINISHED, REQ_FIRST_TOKEN,
+                   REQ_PREFILL_CHUNK, REQ_QUEUED, REQ_REJECTED,
+                   SCHED_BUDGET, TRACE_DECODE, TRACE_PREFILL, TRACE_VERIFY,
+                   TRACK_ENGINE, TRACK_SCHED, resolve_recorder, slot_track)
 from .kv_cache import (NULL_PAGE, PagedKVCache, cdiv, place_prefill,
                        stage_chunk)
 from .prefix_cache import PrefixCache
@@ -147,7 +153,16 @@ class Request:
     failed: bool = False
     error: Optional[str] = None
     prefill_pos: int = 0            # prompt tokens already prefilled
+    # Lifecycle stamps, all on the ENGINE's clock (``ServingEngine.clock``
+    # — the injectable obs clock, ``time.perf_counter`` by default), so
+    # request latencies and the trace's dispatch spans share one
+    # timebase.  0.0 means "hasn't happened"; the derived properties
+    # below return ``nan`` until their stamps exist and a finite value
+    # forever after — an admission-REJECTED request still gets a real
+    # ``finished_at`` (it failed AT a wall-clock time), so its
+    # ``latency_s`` is finite while its ``ttft_s`` stays nan.
     submitted_at: float = 0.0
+    admitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
 
@@ -166,6 +181,26 @@ class Request:
         if self.finished_at <= 0.0 or self.submitted_at <= 0.0:
             return float("nan")
         return self.finished_at - self.submitted_at
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Submit-to-admission wait; ``nan`` until the request takes a
+        slot (rejected requests never do)."""
+        if self.admitted_at <= 0.0 or self.submitted_at <= 0.0:
+            return float("nan")
+        return self.admitted_at - self.submitted_at
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token AFTER the first (decode steady-state):
+        ``(finished - first_token) / (n_tokens - 1)``.  ``nan`` until
+        finished, and for requests that produced fewer than two tokens
+        (a single token has no inter-token gap)."""
+        n = len(self.out_tokens)
+        if (n < 2 or self.finished_at <= 0.0
+                or self.first_token_at <= 0.0):
+            return float("nan")
+        return (self.finished_at - self.first_token_at) / (n - 1)
 
 
 def _ngram_continuation(hist: np.ndarray, k: int) -> List[int]:
@@ -221,6 +256,7 @@ class ServingEngine:
                  quant: Optional[str] = None,
                  verify: Optional[str] = None,
                  autotune=None,
+                 telemetry=None, clock=None,
                  mesh=None):
         # Quantized serving (DESIGN.md §14): ``quant=`` overrides the
         # config's QuantMode for this engine — the plan, kernel choices,
@@ -255,6 +291,15 @@ class ServingEngine:
         # compile-storm signal.
         self._traces: Dict[str, int] = {"prefill": 0, "decode": 0,
                                         "verify": 0}
+        # Telemetry (DESIGN.md §17): ``telemetry=`` is None/False (off,
+        # zero-overhead NULL recorder), True (fresh Recorder), or a
+        # Recorder instance; ``clock=`` injects the monotonic clock BOTH
+        # the recorder and the Request lifecycle stamps use, so spans and
+        # latencies share one timebase (and tests run deterministic).
+        self.obs = resolve_recorder(telemetry, clock=clock)
+        self.clock = (clock if clock is not None
+                      else (self.obs.clock if self.obs.enabled
+                            else time.perf_counter))
         # EMA of per-dispatch useful-tick fraction — the adaptive prefill
         # budget's decode-pressure signal (1.0 = every scan tick useful).
         self.decode_eff = 1.0
@@ -271,6 +316,7 @@ class ServingEngine:
         self._use_tuner = use_tuner
         self.tuner = resolve_tuner(autotune, cfg)
         if self.tuner is not None:
+            self.tuner.obs = self.obs
             for d in self.tuner.table.diagnostics:
                 _warnings.warn(f"autotune table degraded: {d}")
 
@@ -367,11 +413,12 @@ class ServingEngine:
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
                 cfg, slots=batch_slots, max_len=max_len,
-                page_size=page_size, mesh=mesh)
+                page_size=page_size, mesh=mesh, obs=self.obs)
             self._slot_cache = self.kv.init_cache()
 
             def _prefill_into(p, batch, slot_cache, slot, pages):
                 self._traces["prefill"] += 1
+                self.obs.instant(TRACE_PREFILL, track=TRACK_ENGINE)
                 logits, fresh = prefill(p, cfg, batch)
                 placed = place_prefill(slot_cache, fresh, slot, pages,
                                        layout=cfg.kv_cache_layout)
@@ -381,6 +428,7 @@ class ServingEngine:
             def _decode_n(p, tok, cache, table, pos, lengths, cow_src,
                           cow_dst, block):
                 self._traces["decode"] += 1
+                self.obs.instant(TRACE_DECODE, track=TRACK_ENGINE)
                 # Copy-on-write step (prefix bootstrap): slots whose next
                 # append lands inside a shared page carry a (src, dst)
                 # page pair; the shared page is duplicated onto the
@@ -417,6 +465,7 @@ class ServingEngine:
 
             def _prefill_into(p, batch, slot_cache, slot):
                 self._traces["prefill"] += 1
+                self.obs.instant(TRACE_PREFILL, track=TRACK_ENGINE)
                 logits, fresh = prefill(p, cfg, batch)
                 placed = _place_cache_slot(slot_cache, fresh, slot)
                 return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
@@ -424,6 +473,7 @@ class ServingEngine:
 
             def _decode_n(p, tok, cache, pos, lengths, block):
                 self._traces["decode"] += 1
+                self.obs.instant(TRACE_DECODE, track=TRACK_ENGINE)
 
                 def tick(carry, _):
                     tok, cache, pos, lengths = carry
@@ -449,6 +499,7 @@ class ServingEngine:
             def _verify_fwd(p, toks, cache, table, pos, lengths, cow_src,
                             cow_dst):
                 self._traces["verify"] += 1
+                self.obs.instant(TRACE_VERIFY, track=TRACK_ENGINE)
                 # Same pre-scan COW as the decode dispatch: a bootstrap
                 # slot's first append may land inside a shared page.
                 if prefix_bootstrap:
@@ -485,6 +536,7 @@ class ServingEngine:
             def _chunk_fwd(p, toks, slot_cache, row, cpages, off, last,
                            cow_src, cow_dst):
                 self._traces["prefill"] += 1
+                self.obs.instant(TRACE_PREFILL, track=TRACK_ENGINE)
                 nt, _lg, placed = _model_prefill_chunk(
                     p, cfg, toks, slot_cache, row, cpages, off, last,
                     cow_src, cow_dst)
@@ -513,12 +565,12 @@ class ServingEngine:
         self.prefix: Optional[PrefixCache] = None
         if prefix_cache:
             self.prefix = PrefixCache(self.kv, chunk=self.chunk,
-                                      bootstrap=prefix_bootstrap)
+                                      bootstrap=prefix_bootstrap,
+                                      obs=self.obs)
         # Pending copy-on-write per slot: the LOGICAL page whose next
         # write must swap in a private copy (the physical src is read
         # from the table row at swap time — never cached here).
         self._cow: List[Optional[int]] = [None] * batch_slots
-        self._prompt_pages = 0
 
         # Reserved K/V bytes: pool size (paged) / worst-case slot rows
         # (contiguous) — the paged win is measured against bytes-IN-USE.
@@ -526,69 +578,135 @@ class ServingEngine:
             leaf.nbytes for path, leaf in
             jax.tree_util.tree_flatten_with_path(self._slot_cache)[0]
             if cache_leaf_kind(cache_leaf_name(path)) in ("kv", "scale"))
-        self.metrics: Dict[str, float] = {
-            "dispatches": 0, "ticks": 0, "scan_ticks": 0, "generated": 0,
-            "prefills": 0, "prefill_chunks": 0, "rejected": 0,
-            "prefill_traces": 0, "decode_traces": 0,
-            "decode_block": self.decode_block,
-            "paged": int(paged),
-            "chunked": int(self.chunked),
-            "prefill_chunk": self.chunk,
-            "page_size": self.kv.page_size if self.kv else 0,
-            "kv_bytes_reserved": self.kv_bytes_reserved,
-            "kv_bytes_peak": 0,
-            "kv_bytes_cached": 0,
-            "quant": cfg.quant,
-            "verified": int(bool(self.plan.verified))
-                        if self.plan is not None else 0,
-            "kv_itemsize_effective": (
-                self.kv.kv_itemsize_effective if self.kv is not None
-                else (2.0 if cfg.dtype == "bfloat16" else 4.0)),
-            "sched_budget": 0,
-            "sharded": int(mesh is not None),
-            "kv_shards": self.kv.kv_shards if self.kv else 1,
-            "prefix_enabled": int(self.prefix is not None),
-            "prefix_hit_pages": 0,
-            "prefix_hit_rate": 0.0,
-            "prompt_pages": 0,
-            "cow_copies": 0,
-            "prefix_bootstraps": 0,
-            "prefix_evictions": 0,
-            "prefix_cached_pages": 0,
-            "decode_block_last": self.decode_block,
-            "speculative": int(self.speculative),
-            "draft_len": self.draft_len if self.speculative else 0,
-            "draft_tokens": 0,
-            "accepted_tokens": 0,
-            "accept_rate": 0.0,
-            "spec_tokens": 0,
-            "verify_dispatches": 0,
-            "dispatches_per_token": 0.0,
-            "rollbacks": 0,
-            "rollback_pages": 0,
-            "verify_traces": 0,
-            # Plan provenance (DESIGN.md §16): where the plan's kernel
-            # latencies came from, and what the tuner did to get them.
-            "plan_source": (self.plan.cost_source
-                            if self.plan is not None else "analytic"),
-            "autotuned": int(self.tuner is not None),
-            "tune_table": (self.tuner.table.path or ""
-                           if self.tuner is not None else ""),
-            "tune_hits": 0, "tune_misses": 0, "tune_measured": 0,
-            "tune_pruned": 0, "tune_entries": 0,
-        }
+        # Typed metric registry (DESIGN.md §17).  Every number the old
+        # ad-hoc ``self.metrics`` dict carried is declared here with an
+        # EXPLICIT lifetime — Counter (accumulates for the engine's whole
+        # life), Gauge (point-in-time), Info (config/provenance string) —
+        # plus the new latency histograms.  ``self.metrics`` stays a live
+        # read-only Mapping over the lifetime view, so every existing
+        # consumer (``dict(eng.metrics)``, key reads, counter deltas)
+        # works unchanged; ``snapshot("last_generate")`` adds the
+        # windowed view (``Registry.mark()`` at the top of ``generate``).
+        reg = self.registry = Registry()
+        for name, help in (
+            ("dispatches", "decode+verify dispatches (not prefill)"),
+            ("ticks", "useful decode scan ticks (max per dispatch)"),
+            ("scan_ticks", "total decode scan ticks incl. wasted tail"),
+            ("generated", "tokens delivered to requests"),
+            ("prefills", "prompt prefills completed (incl. final chunk)"),
+            ("prefill_chunks", "chunked-prefill dispatches"),
+            ("rejected", "requests failed at admission or allocation"),
+            ("prefill_traces", "prefill programs BUILT (trace probe)"),
+            ("decode_traces", "decode programs BUILT (trace probe)"),
+            ("verify_traces", "verify programs BUILT (trace probe)"),
+            ("prefix_hit_pages", "prompt pages served from prefix cache"),
+            ("prompt_pages", "prompt pages needed by admitted requests"),
+            ("cow_copies", "copy-on-write page copies"),
+            ("prefix_bootstraps", "fully-cached prompts decode-bootstrapped"),
+            ("prefix_evictions", "pages evicted from the prefix cache"),
+            ("draft_tokens", "speculative draft tokens proposed"),
+            ("accepted_tokens", "draft tokens accepted by verify"),
+            ("spec_tokens", "tokens delivered by speculative dispatches"),
+            ("verify_dispatches", "speculative verify dispatches"),
+            ("rollbacks", "KV extent rollbacks after rejected drafts"),
+            ("rollback_pages", "pages freed by rollbacks"),
+            ("tune_hits", "tune-table lookups served"),
+            ("tune_misses", "tune-table lookups missed"),
+            ("tune_measured", "tuner measurement dispatches"),
+            ("tune_pruned", "tuner candidates pruned by lint"),
+        ):
+            reg.counter(name, help)
+        reg.gauge("decode_block", value=self.decode_block)
+        reg.gauge("paged", value=int(paged))
+        reg.gauge("chunked", value=int(self.chunked))
+        reg.gauge("prefill_chunk", value=self.chunk)
+        reg.gauge("page_size",
+                  value=self.kv.page_size if self.kv else 0)
+        reg.gauge("kv_bytes_reserved", value=self.kv_bytes_reserved)
+        reg.gauge("kv_bytes_peak")
+        reg.gauge("kv_bytes_cached")
+        reg.info("quant", value=cfg.quant)
+        reg.gauge("verified", value=int(bool(self.plan.verified))
+                  if self.plan is not None else 0)
+        reg.gauge("kv_itemsize_effective", value=(
+            self.kv.kv_itemsize_effective if self.kv is not None
+            else (2.0 if cfg.dtype == "bfloat16" else 4.0)))
+        reg.gauge("sched_budget")
+        reg.gauge("sharded", value=int(mesh is not None))
+        reg.gauge("kv_shards", value=self.kv.kv_shards if self.kv else 1)
+        reg.gauge("prefix_enabled", value=int(self.prefix is not None))
+        reg.gauge("prefix_hit_rate")
+        reg.gauge("prefix_cached_pages")
+        reg.gauge("pages_in_use")
+        reg.gauge("decode_block_last", value=self.decode_block)
+        reg.gauge("speculative", value=int(self.speculative))
+        reg.gauge("draft_len",
+                  value=self.draft_len if self.speculative else 0)
+        reg.gauge("accept_rate")
+        reg.gauge("dispatches_per_token")
+        # Plan provenance (DESIGN.md §16): where the plan's kernel
+        # latencies came from, and what the tuner did to get them.
+        reg.info("plan_source",
+                 value=(self.plan.cost_source if self.plan is not None
+                        else "analytic"))
+        reg.gauge("autotuned", value=int(self.tuner is not None))
+        reg.info("tune_table",
+                 value=(self.tuner.table.path or ""
+                        if self.tuner is not None else ""))
+        reg.gauge("tune_entries")
+        # Latency distributions (log-spaced buckets, exported with
+        # p50/p90/p99): request-level TTFT / TPOT / queue wait, plus
+        # per-dispatch wall times for each dispatch kind.
+        reg.histogram("ttft_s", "time to first token")
+        reg.histogram("tpot_s", "time per output token after the first")
+        reg.histogram("queue_wait_s", "submit-to-admission wait")
+        reg.histogram("chunk_latency_s", "prefill-chunk dispatch wall")
+        reg.histogram("prefill_dispatch_s",
+                      "whole-prompt prefill dispatch wall")
+        reg.histogram("decode_dispatch_s", "decode-block dispatch wall")
+        reg.histogram("verify_dispatch_s", "verify dispatch wall")
+        self.metrics = MetricsView(reg)
         self._refresh_tune_metrics()
+
+    def _sync_counter(self, name: str, total: float) -> None:
+        """Catch a lifetime counter up to an externally-maintained total
+        (trace probes, prefix evictions, tune stats) — the delta lands in
+        the current ``last_generate`` window."""
+        c = self.registry[name]
+        d = total - c.value()
+        if d > 0:
+            c.inc(d)
 
     def _refresh_tune_metrics(self) -> None:
         if self.tuner is None:
             return
-        self.metrics["tune_hits"] = self.tuner.table.hits
-        self.metrics["tune_misses"] = self.tuner.table.misses
-        self.metrics["tune_measured"] = self.tuner.stats.measured
-        self.metrics["tune_pruned"] = self.tuner.stats.pruned
-        self.metrics["tune_entries"] = len(self.tuner.table)
+        self._sync_counter("tune_hits", self.tuner.table.hits)
+        self._sync_counter("tune_misses", self.tuner.table.misses)
+        self._sync_counter("tune_measured", self.tuner.stats.measured)
+        self._sync_counter("tune_pruned", self.tuner.stats.pruned)
+        self.registry["tune_entries"].set(len(self.tuner.table))
         if self.plan is not None:
-            self.metrics["plan_source"] = self.plan.cost_source
+            self.registry["plan_source"].set(self.plan.cost_source)
+
+    def snapshot(self, view: str = "lifetime") -> Dict[str, Any]:
+        """Materialized metrics for ``view`` (``"lifetime"`` |
+        ``"last_generate"``).  The lifetime view equals
+        ``dict(self.metrics)``; the windowed view recomputes the derived
+        rates from the WINDOW's counters (the stored gauges are lifetime
+        rates — the conflation this method exists to fix)."""
+        out = self.registry.snapshot(view)
+        if view == "last_generate":
+            reg = self.registry
+            hits = reg["prefix_hit_pages"].value(view)
+            out["prefix_hit_rate"] = (
+                hits / max(reg["prompt_pages"].value(view), 1))
+            out["accept_rate"] = (
+                reg["accepted_tokens"].value(view)
+                / max(reg["draft_tokens"].value(view), 1))
+            out["dispatches_per_token"] = (
+                reg["verify_dispatches"].value(view)
+                / max(reg["spec_tokens"].value(view), 1))
+        return out
 
     def _mesh_ctx(self):
         """Context installing the engine's mesh AND tuner for plan
@@ -606,10 +724,17 @@ class ServingEngine:
     def generate(self, prompts: List[np.ndarray],
                  max_new_tokens: int = 16) -> List[Request]:
         """Serve a list of prompts (any mix of lengths) to completion."""
+        self.registry.mark()        # open the ``last_generate`` window
         reqs = [Request(rid=i, prompt=np.asarray(p),
                         max_new_tokens=max_new_tokens,
-                        submitted_at=time.perf_counter())
+                        submitted_at=self.clock())
                 for i, p in enumerate(prompts)]
+        if self.obs.enabled:
+            for r in reqs:
+                self.obs.instant(REQ_QUEUED, track=TRACK_SCHED,
+                                 ts=r.submitted_at, rid=r.rid,
+                                 plen=int(r.prompt.shape[0])
+                                 if r.prompt.ndim >= 1 else 0)
         pending = deque(reqs)
         active: List[Optional[Request]] = [None] * self.slots
         decoding = [False] * self.slots     # False: idle or mid-prefill
@@ -641,29 +766,32 @@ class ServingEngine:
                 progressed = True
             if not progressed:                      # defensive: no work
                 break
+        reg = self.registry
         if self.kv is not None:
-            self.metrics["kv_bytes_peak"] = max(
-                self.metrics["kv_bytes_peak"], self.kv.peak_bytes_in_use)
+            reg["kv_bytes_peak"].max(self.kv.peak_bytes_in_use)
+            reg["pages_in_use"].set(self.kv.pages_in_use)
         else:
-            self.metrics["kv_bytes_peak"] = self.kv_bytes_reserved
+            reg["kv_bytes_peak"].set(self.kv_bytes_reserved)
         if self.prefix is not None:
-            self.metrics["prompt_pages"] = self._prompt_pages
-            self.metrics["prefix_hit_rate"] = (
-                self.metrics["prefix_hit_pages"]
-                / max(self._prompt_pages, 1))
-            self.metrics["prefix_evictions"] = self.prefix.evictions
-            self.metrics["prefix_cached_pages"] = self.kv.pages_cached
-            self.metrics["kv_bytes_cached"] = self.kv.bytes_cached
-        self.metrics["prefill_traces"] = self._traces["prefill"]
-        self.metrics["decode_traces"] = self._traces["decode"]
-        self.metrics["verify_traces"] = self._traces["verify"]
+            # Derived-rate gauges keep their historical LIFETIME
+            # semantics (hit pages over ALL prompt pages ever admitted);
+            # ``snapshot("last_generate")`` recomputes them per window.
+            reg["prefix_hit_rate"].set(
+                reg["prefix_hit_pages"].value()
+                / max(reg["prompt_pages"].value(), 1))
+            self._sync_counter("prefix_evictions", self.prefix.evictions)
+            reg["prefix_cached_pages"].set(self.kv.pages_cached)
+            reg["kv_bytes_cached"].set(self.kv.bytes_cached)
+        self._sync_counter("prefill_traces", self._traces["prefill"])
+        self._sync_counter("decode_traces", self._traces["decode"])
+        self._sync_counter("verify_traces", self._traces["verify"])
         if self.speculative:
-            self.metrics["accept_rate"] = (
-                self.metrics["accepted_tokens"]
-                / max(self.metrics["draft_tokens"], 1))
-            self.metrics["dispatches_per_token"] = (
-                self.metrics["verify_dispatches"]
-                / max(self.metrics["spec_tokens"], 1))
+            reg["accept_rate"].set(
+                reg["accepted_tokens"].value()
+                / max(reg["draft_tokens"].value(), 1))
+            reg["dispatches_per_token"].set(
+                reg["verify_dispatches"].value()
+                / max(reg["spec_tokens"].value(), 1))
         self._refresh_tune_metrics()
         return reqs
 
@@ -690,7 +818,7 @@ class ServingEngine:
         waiting = sum(1 for s in range(self.slots)
                       if active[s] is not None and not decoding[s])
         if not waiting:
-            self.metrics["sched_budget"] = 0
+            self.registry["sched_budget"].set(0)
             return 0
         backlog = sum(1 for s in range(self.slots)
                       if active[s] is not None and decoding[s])
@@ -700,7 +828,12 @@ class ServingEngine:
         slack = (1.0 - self.decode_eff) * backlog    # unused decode capacity
         share = min(float(self.slots), waiting + slack)
         budget = int(self.chunk * max(1.0, share))
-        self.metrics["sched_budget"] = budget
+        self.registry["sched_budget"].set(budget)
+        if self.obs.enabled:
+            self.obs.instant(SCHED_BUDGET, track=TRACK_SCHED,
+                             budget=budget, waiting=waiting,
+                             backlog=backlog,
+                             decode_eff=round(self.decode_eff, 4))
         return budget
 
     def _next_request(self, pending, scores=None) -> Request:
@@ -755,9 +888,16 @@ class ServingEngine:
                     r.failed = True
                     r.error = err
                     r.done = True
-                    r.finished_at = time.perf_counter()
-                    self.metrics["rejected"] += 1
+                    # A rejected request failed AT a real wall-clock time:
+                    # latency_s is finite, ttft_s stays nan (no token).
+                    r.finished_at = self.clock()
+                    self.registry["rejected"].inc()
+                    if self.obs.enabled:
+                        self.obs.instant(REQ_REJECTED, track=TRACK_SCHED,
+                                         ts=r.finished_at, rid=r.rid,
+                                         error=err)
                     continue
+                self._stamp_admitted(r, s)
                 if self.chunked:
                     r.prefill_pos = 0
                     self._cow[s] = None
@@ -776,6 +916,26 @@ class ServingEngine:
                     active[s] = r
                     decoding[s] = True
 
+    def _stamp_admitted(self, r: Request, slot: int) -> None:
+        """Request takes a slot: stamp ``admitted_at`` on the engine
+        clock, observe the queue wait, emit the lifecycle instant."""
+        r.admitted_at = self.clock()
+        self.registry["queue_wait_s"].observe(r.queue_wait_s)
+        if self.obs.enabled:
+            self.obs.instant(REQ_ADMITTED, track=slot_track(slot),
+                             ts=r.admitted_at, rid=r.rid, slot=slot)
+
+    def _stamp_first_token(self, r: Request, slot: int) -> None:
+        """First output token exists: stamp it, observe TTFT, emit the
+        lifecycle instant.  Call sites guard on ``first_token_at <= 0``
+        where a slot can reach this more than once."""
+        r.first_token_at = self.clock()
+        self.registry["ttft_s"].observe(r.ttft_s)
+        if self.obs.enabled:
+            self.obs.instant(REQ_FIRST_TOKEN, track=slot_track(slot),
+                             ts=r.first_token_at, rid=r.rid,
+                             ttft_s=round(r.ttft_s, 6))
+
     def _admit_prefix(self, slot: int, r: Request, active, decoding, pos,
                       tok) -> None:
         """Chunked admission through the prefix walk: claim every cached
@@ -787,8 +947,8 @@ class ServingEngine:
         hit = self.prefix.claim(slot, r.prompt)
         r.prefill_pos = hit.prefill_start
         self._cow[slot] = hit.cow
-        self.metrics["prefix_hit_pages"] += hit.hit_pages
-        self._prompt_pages += hit.prompt_pages
+        self.registry["prefix_hit_pages"].inc(hit.hit_pages)
+        self.registry["prompt_pages"].inc(hit.prompt_pages)
         active[slot] = r
         if not hit.full:
             decoding[slot] = False
@@ -803,8 +963,8 @@ class ServingEngine:
         decoding[slot] = True
         pos[slot] = plen - 1
         tok[slot, 0] = int(r.prompt[-1])
-        self.metrics["prefix_bootstraps"] += 1
-        self.metrics["prefills"] += 1
+        self.registry["prefix_bootstraps"].inc()
+        self.registry["prefills"].inc()
 
     def _admit(self, slot: int, r: Request, pos, tok) -> None:
         """Whole-prompt prefill at the request's own length (fallback path:
@@ -815,6 +975,7 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {plen} exceeds max_len {self.max_len}")
         batch = {"tokens": jnp.asarray(r.prompt)[None]}
+        t0 = self.clock()
         with self._mesh_ctx():
             if self.kv is not None:
                 pages = jnp.asarray(self.kv.ensure(slot, plen))
@@ -829,13 +990,22 @@ class ServingEngine:
         # exception must not leave the engine holding a dead reference.
         self._slot_cache = cache
         t = int(np.asarray(next_tok)[0, 0])
+        dt = self.clock() - t0       # host-visible dispatch wall (the
+        #                              np.asarray read-back synchronizes)
+        self.registry["prefill_dispatch_s"].observe(dt)
+        if self.obs.enabled:
+            self.obs.complete(DISPATCH_PREFILL, t0, dt,
+                              track=TRACK_ENGINE, slot=slot, rid=r.rid,
+                              tokens=plen)
+            self.obs.complete("prefill", t0, dt, track=slot_track(slot),
+                              rid=r.rid, tokens=plen)
         r.out_tokens.append(t)
-        r.first_token_at = time.perf_counter()
+        self._stamp_first_token(r, slot)
         r.prefill_pos = plen
         pos[slot] = plen
         tok[slot, 0] = t
-        self.metrics["prefills"] += 1
-        self.metrics["generated"] += 1
+        self.registry["prefills"].inc()
+        self.registry["generated"].inc()
 
     def _dispatch_chunk(self, slot: int, r: Request, active, decoding,
                         pos, tok) -> None:
@@ -855,7 +1025,7 @@ class ServingEngine:
             off, caught = self.prefix.extend_claim(slot, r.prompt, off)
             if caught:
                 r.prefill_pos = off
-                self.metrics["prefix_hit_pages"] += caught
+                self.registry["prefix_hit_pages"].inc(caught)
         # Pages for the chunk's span (page-aligned by construction); the
         # portion of a final chunk past max_len maps to the NULL page.
         # An allocator failure here (pool pressure with every cached page
@@ -866,12 +1036,13 @@ class ServingEngine:
         except RuntimeError as e:
             r.failed = True
             r.error = str(e)
-            self.metrics["rejected"] += 1
+            self.registry["rejected"].inc()
             self._retire(slot, r, active, decoding, pos, tok)
             return
         row = self.kv.table_row(slot)
         toks, cpages, last = stage_chunk(r.prompt, off, c, row,
                                          self.kv.page_size)
+        t0 = self.clock()
         with self._mesh_ctx():
             # The COW operands ride as NULL here: the engine's matching
             # policies never hand a chunk a shared write target (default
@@ -885,8 +1056,19 @@ class ServingEngine:
                 jnp.int32(last), jnp.int32(NULL_PAGE),
                 jnp.int32(NULL_PAGE))
         self._slot_cache = cache
+        dt = self.clock() - t0
+        self.registry["chunk_latency_s"].observe(dt)
+        if self.obs.enabled:
+            ci = off // c
+            self.obs.complete(DISPATCH_PREFILL_CHUNK, t0, dt,
+                              track=TRACK_ENGINE, slot=slot, rid=r.rid,
+                              chunk=ci, off=off)
+            self.obs.complete("prefill_chunk", t0, dt,
+                              track=slot_track(slot), rid=r.rid, chunk=ci)
+            self.obs.instant(REQ_PREFILL_CHUNK, track=slot_track(slot),
+                             rid=r.rid, chunk=ci, off=off)
         r.prefill_pos = min(off + c, plen)
-        self.metrics["prefill_chunks"] += 1
+        self.registry["prefill_chunks"].inc()
         if r.prefill_pos < plen:
             return                                  # more chunks to go
         if self.prefix is not None:
@@ -895,12 +1077,12 @@ class ServingEngine:
             self.prefix.insert(slot, r.prompt)
         t = int(np.asarray(next_tok)[0, 0])
         r.out_tokens.append(t)
-        r.first_token_at = time.perf_counter()
+        self._stamp_first_token(r, slot)
         pos[slot] = plen
         tok[slot, 0] = t
         decoding[slot] = True
-        self.metrics["prefills"] += 1
-        self.metrics["generated"] += 1
+        self.registry["prefills"].inc()
+        self.registry["generated"].inc()
         if (len(r.out_tokens) >= r.max_new_tokens
                 or pos[slot] >= self.max_len):
             self._retire(slot, r, active, decoding, pos, tok)
@@ -908,7 +1090,15 @@ class ServingEngine:
     def _retire(self, slot: int, r: Request, active, decoding, pos,
                 tok) -> None:
         r.done = True
-        r.finished_at = time.perf_counter()
+        r.finished_at = self.clock()
+        if not r.failed:
+            # Latency/TPOT only count completed requests; Histogram
+            # ignores the nan a rejected or single-token request yields.
+            self.registry["tpot_s"].observe(r.tpot_s)
+        if self.obs.enabled:
+            self.obs.instant(REQ_FINISHED, track=slot_track(slot),
+                             ts=r.finished_at, rid=r.rid,
+                             tokens=len(r.out_tokens), failed=r.failed)
         active[slot] = None
         decoding[slot] = False
         pos[slot] = 0
@@ -945,7 +1135,7 @@ class ServingEngine:
         runnable = [s for s in range(self.slots)
                     if active[s] is not None and decoding[s]]
         block = self._decode_block_size(len(runnable))
-        self.metrics["decode_block_last"] = block
+        self.registry["decode_block_last"].set(block)
         if self.kv is not None:
             # Pending copy-on-write pairs (prefix bootstrap: the next
             # append lands inside a shared page) — resolve them to
@@ -961,7 +1151,7 @@ class ServingEngine:
                         cow_src[s], cow_dst[s] = self.kv.cow_page(
                             s, self._cow[s])
                         self._cow[s] = None
-                        self.metrics["cow_copies"] += 1
+                        self.registry["cow_copies"].inc()
                         # The slot's reference moved off the shared src:
                         # refresh its eviction entry.
                         self.prefix.page_released(int(cow_src[s]))
@@ -981,7 +1171,7 @@ class ServingEngine:
                     # same contract as the chunk path.
                     r.failed = True
                     r.error = str(e)
-                    self.metrics["rejected"] += 1
+                    self.registry["rejected"].inc()
                     self._retire(s, r, active, decoding, pos, tok)
                     cow_src[s] = cow_dst[s] = NULL_PAGE
             runnable = [s for s in runnable
@@ -997,6 +1187,7 @@ class ServingEngine:
             for s in runnable:
                 dpos[s] = pos[s]
                 dlen[s] = pos[s]
+            t0 = self.clock()
             with self._mesh_ctx():
                 next_tok, cache, toks = self._decode(
                     self.params, jnp.asarray(tok), self._slot_cache,
@@ -1004,6 +1195,7 @@ class ServingEngine:
                     jnp.asarray(dlen), jnp.asarray(cow_src),
                     jnp.asarray(cow_dst), block)
         else:
+            t0 = self.clock()
             with self._mesh_ctx():
                 next_tok, cache, toks = self._decode(
                     self.params, jnp.asarray(tok), self._slot_cache,
@@ -1011,6 +1203,15 @@ class ServingEngine:
         self._slot_cache = cache
         toks_np = np.asarray(toks)                   # [N, slots]
         last_np = np.asarray(next_tok)               # [slots, 1]
+        dt = self.clock() - t0       # the read-backs synchronize, so dt
+        #                              is the real device+host block wall
+        self.registry["decode_dispatch_s"].observe(dt)
+        if self.obs.enabled:
+            self.obs.complete(DISPATCH_DECODE, t0, dt, track=TRACK_ENGINE,
+                              block=block, slots=len(runnable))
+            for s in runnable:
+                self.obs.complete("decode", t0, dt, track=slot_track(s),
+                                  rid=active[s].rid, block=block)
         useful = 0
         for s in runnable:
             r = active[s]
@@ -1020,17 +1221,19 @@ class ServingEngine:
             r.out_tokens.extend(int(t) for t in toks_np[:h, s])
             if r.out_tokens and r.first_token_at <= 0.0:
                 # Bootstrap-admitted slots emit their first token here.
-                r.first_token_at = time.perf_counter()
+                self._stamp_first_token(r, s)
             useful = max(useful, h)
-            self.metrics["generated"] += h
+            self.registry["generated"].inc(h)
             pos[s] = min(int(pos[s]) + block, self.max_len)
             tok[s, 0] = last_np[s, 0]
             if (len(r.out_tokens) >= r.max_new_tokens
                     or pos[s] >= self.max_len):
                 self._retire(s, r, active, decoding, pos, tok)
-        self.metrics["dispatches"] += 1
-        self.metrics["ticks"] += useful
-        self.metrics["scan_ticks"] += block
+        self.registry["dispatches"].inc()
+        self.registry["ticks"].inc(useful)
+        self.registry["scan_ticks"].inc(block)
+        if self.kv is not None:
+            self.registry["pages_in_use"].set(self.kv.pages_in_use)
         self.decode_eff = (0.5 * self.decode_eff
                            + 0.5 * useful / block)
 
@@ -1099,13 +1302,13 @@ class ServingEngine:
                     cow_src[s], cow_dst[s] = self.kv.cow_page(
                         s, self._cow[s])
                     self._cow[s] = None
-                    self.metrics["cow_copies"] += 1
+                    self.registry["cow_copies"].inc()
                     self.prefix.page_released(int(cow_src[s]))
                 self.kv.ensure(s, min(int(pos[s]) + w, self.max_len))
             except RuntimeError as e:
                 r.failed = True
                 r.error = str(e)
-                self.metrics["rejected"] += 1
+                self.registry["rejected"].inc()
                 self._retire(s, r, active, decoding, pos, tok)
                 cow_src[s] = cow_dst[s] = NULL_PAGE
         runnable = [s for s in runnable
@@ -1121,6 +1324,7 @@ class ServingEngine:
             toks[s, 1:1 + len(d)] = d
             dpos[s] = pos[s]
             dlen[s] = pos[s]
+        t0 = self.clock()
         with self._mesh_ctx():
             greedy, cache = self._verify(
                 self.params, jnp.asarray(toks), self._slot_cache,
@@ -1128,6 +1332,15 @@ class ServingEngine:
                 jnp.asarray(cow_src), jnp.asarray(cow_dst))
         self._slot_cache = cache
         g = np.asarray(greedy)                       # [slots, W]
+        dt = self.clock() - t0
+        self.registry["verify_dispatch_s"].observe(dt)
+        if self.obs.enabled:
+            self.obs.complete(DISPATCH_VERIFY, t0, dt, track=TRACK_ENGINE,
+                              window=w, slots=len(runnable))
+            for s in runnable:
+                self.obs.complete("verify", t0, dt, track=slot_track(s),
+                                  rid=active[s].rid, window=w,
+                                  drafts=len(drafts[s]))
         useful = 0
         filled = 0
         for s in runnable:
@@ -1147,11 +1360,11 @@ class ServingEngine:
             delivered = a + 1                        # y0..ya
             r.out_tokens.extend(int(g[s, i]) for i in range(delivered))
             if r.first_token_at <= 0.0:
-                r.first_token_at = time.perf_counter()
-            self.metrics["generated"] += delivered
-            self.metrics["spec_tokens"] += delivered
-            self.metrics["draft_tokens"] += len(d)
-            self.metrics["accepted_tokens"] += min(a, len(d))
+                self._stamp_first_token(r, s)
+            self.registry["generated"].inc(delivered)
+            self.registry["spec_tokens"].inc(delivered)
+            self.registry["draft_tokens"].inc(len(d))
+            self.registry["accepted_tokens"].inc(min(a, len(d)))
             useful = max(useful, delivered)
             filled += delivered
             pos[s] = int(pos[s]) + delivered
@@ -1164,17 +1377,18 @@ class ServingEngine:
             # overwritten as the slot advances.
             dropped = self.kv.rollback_extent(s, int(pos[s]))
             if dropped:
-                self.metrics["rollbacks"] += 1
-                self.metrics["rollback_pages"] += dropped
+                self.registry["rollbacks"].inc()
+                self.registry["rollback_pages"].inc(dropped)
             if self._debug_check_pages:
                 self.kv.assert_page_accounting()
             if (len(r.out_tokens) >= r.max_new_tokens
                     or pos[s] >= self.max_len):
                 self._retire(s, r, active, decoding, pos, tok)
-        self.metrics["dispatches"] += 1
-        self.metrics["verify_dispatches"] += 1
-        self.metrics["ticks"] += useful
-        self.metrics["scan_ticks"] += w
+        self.registry["dispatches"].inc()
+        self.registry["verify_dispatches"].inc()
+        self.registry["ticks"].inc(useful)
+        self.registry["scan_ticks"].inc(w)
+        self.registry["pages_in_use"].set(self.kv.pages_in_use)
         # The decode-pressure EMA counts ACCEPTED tokens per verify row,
         # not scan ticks — a rejected draft row is wasted capacity
         # exactly like a wasted scan tick.

@@ -51,6 +51,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..models.params import (CacheDef, cache_defs, cache_leaf_kind,
                              cache_leaf_name)
+from ..obs import (NULL_RECORDER, PAGE_ALLOC, PAGE_COW, PAGE_EVICT,
+                   PAGE_FREE, PAGE_ROLLBACK, TRACK_KV)
 
 Tree = Any
 
@@ -587,10 +589,14 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
-                 page_size: int = 16, mesh=None):
+                 page_size: int = 16, mesh=None, obs=NULL_RECORDER):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.cfg = cfg
+        # Telemetry recorder (obs/events.py): page lifecycle instants on
+        # the "kv" track.  NULL_RECORDER no-ops; emission sites guard on
+        # ``enabled`` so the disabled path never builds argument dicts.
+        self.obs = obs
         self.slots = slots
         self.max_len = max_len
         self.page_size = min(page_size, max_len)
@@ -773,11 +779,18 @@ class PagedKVCache:
             if self.evictor is None or not self.evictor():
                 raise RuntimeError(
                     f"KV page pool exhausted ({self.num_pages - 1} pages)")
-        return self._free.pop()
+        page = self._free.pop()
+        if self.obs.enabled:
+            self.obs.instant(PAGE_ALLOC, track=TRACK_KV, page=page,
+                             free=len(self._free))
+        return page
 
     def free_page(self, page: int) -> None:
         assert self._refs[page] == 0 and page != NULL_PAGE
         self._free.append(page)
+        if self.obs.enabled:
+            self.obs.instant(PAGE_FREE, track=TRACK_KV, page=page,
+                             free=len(self._free))
 
     def ensure(self, slot: int, length: int) -> np.ndarray:
         """Allocate pages so ``slot`` can hold ``length`` tokens; returns
@@ -827,6 +840,9 @@ class PagedKVCache:
         self._owned[slot][logical] = dst
         self._table[slot, logical] = dst
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        if self.obs.enabled:
+            self.obs.instant(PAGE_COW, track=TRACK_KV, slot=slot,
+                             src=src, dst=dst, logical=logical)
         return src, dst
 
     def rollback_extent(self, slot: int, length: int) -> int:
@@ -862,6 +878,9 @@ class PagedKVCache:
             self._table[slot, len(owned)] = NULL_PAGE
             self._deref(page)
             dropped += 1
+        if dropped and self.obs.enabled:
+            self.obs.instant(PAGE_ROLLBACK, track=TRACK_KV, slot=slot,
+                             pages=dropped, length=length)
         return dropped
 
     # ------------------------------------------------- tree page custody
@@ -874,6 +893,8 @@ class PagedKVCache:
         """Tree eviction: reclaim a cached (ref-0, tree-owned) page."""
         assert page in self._tree and self._refs[page] == 0
         self._tree.discard(page)
+        if self.obs.enabled:
+            self.obs.instant(PAGE_EVICT, track=TRACK_KV, page=page)
         self.free_page(page)
 
     def disown(self, page: int) -> None:

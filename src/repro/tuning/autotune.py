@@ -46,6 +46,7 @@ from ..configs.base import ModelConfig
 from ..core.platforms import PLATFORMS, TPU_V5E, Platform
 from ..core.stream_plan import KernelChoice, StreamPlan
 from ..kernels.common import pick_block
+from ..obs import NULL_RECORDER, TRACK_TUNE, TUNE_MEASURE, TUNE_PRUNE
 from .measure import analytic_estimate, measure_candidate
 from .table import TuneEntry, TuneTable, make_key
 
@@ -218,6 +219,10 @@ class Tuner:
         self.autosave = autosave
         self.stats = TunerStats()
         self._memo: Dict[object, StreamPlan] = {}
+        # Telemetry recorder (obs/events.py): measure/prune instants on
+        # the "tune" track.  The engine rebinds this to its own recorder
+        # when telemetry is enabled.
+        self.obs = NULL_RECORDER
 
     # ------------------------------------------------------------ plans
     def tune_plan(self, cfg: ModelConfig, plan: StreamPlan, *,
@@ -287,6 +292,10 @@ class Tuner:
             cfg, plan, kind, stage, cand, platform=platform,
             force=self.force_measure)
         self.stats.measured += 1
+        if self.obs.enabled:
+            self.obs.instant(TUNE_MEASURE, track=TRACK_TUNE,
+                             impl=cand.implementation, stage=stage,
+                             latency_s=latency, source=source)
         if not self.table.frozen:
             self.table.put(key, TuneEntry(latency_s=latency,
                                           source=source))
@@ -306,6 +315,9 @@ class Tuner:
             if i > 0 and not self._legal(cfg, plan, kind, stage, cand,
                                          platform):
                 self.stats.pruned += 1
+                if self.obs.enabled:
+                    self.obs.instant(TUNE_PRUNE, track=TRACK_TUNE,
+                                     impl=cand.implementation, stage=stage)
                 continue
             scored = self._score(cfg, plan, kind, stage, cand, platform)
             if scored is None:
